@@ -1,0 +1,44 @@
+"""Shared benchmark utilities: timing, banded matrix generation, CSV rows."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+
+def banded(n: int, bw: int, seed: int = 0, dtype=np.float64) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    a = np.triu(rng.standard_normal((n, n)))
+    return (np.triu(a) - np.triu(a, bw + 1)).astype(dtype)
+
+
+def synthetic_spectrum(n: int, profile: str, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    u, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    v, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    if profile == "arithmetic":
+        s = np.linspace(1.0, 1.0 / n, n)
+    elif profile == "logarithmic":
+        s = np.logspace(0, -5, n)
+    else:                                    # quartercircle
+        x = (np.arange(n) + 0.5) / n
+        s = np.sqrt(1 - x * x)
+    return u @ np.diag(s) @ v.T, s
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds of fn(*args) (jax-blocking)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,33 @@
+"""Paper Table I + Eq. 1: matrix size for full occupancy, n >= 3*CBW*ALUs.
+
+Reproduces the paper's table for the GPU parts and extends it with the TPU
+pod targets of this framework (execution unit = TensorCore; batch dispatch
+changes the constraint to #matrices >= cores, also shown).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.core.tuning import occupancy_matrix_size
+
+HW = [
+    ("NVIDIA-H100", 132 * 4),        # SMs x warp schedulers (paper)
+    ("AMD-MI300X", 304),
+    ("Intel-PVC-1100", 56),
+    ("TPU-v5e-pod-256chips", 256 * 2),   # 2 TensorCores/chip (this work)
+    ("TPU-v5e-2pods-512chips", 512 * 2),
+]
+
+CBW = 32
+
+
+def run() -> list[str]:
+    out = []
+    for name, alus in HW:
+        n = occupancy_matrix_size(CBW, alus)
+        out.append(row(f"table1/{name}", 0.0,
+                       f"alus={alus};cbw={CBW};n_full_occupancy={n}"))
+    out.append(row("table1/TPU-batch-dispatch", 0.0,
+                   "note=batched spectra need #matrices>=cores instead; "
+                   "wavefront occupancy applies within each matrix"))
+    return out

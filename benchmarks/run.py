@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig6]
+
+Prints ``name,us_per_call,derived`` CSV rows.  The roofline tables
+(EXPERIMENTS.md §Roofline) come from the dry-run artifacts instead:
+``python -m repro.roofline.report`` after ``python -m repro.launch.dryrun``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+SUITES = ["accuracy", "hyperparams", "occupancy", "scaling", "precision",
+          "kernels_bench"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for mod_name in SUITES:
+        if args.only and args.only not in mod_name:
+            continue
+        t0 = time.time()
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+        for line in mod.run():
+            print(line, flush=True)
+        print(f"# {mod_name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

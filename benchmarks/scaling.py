@@ -1,0 +1,35 @@
+"""Paper Fig. 6: band-to-bidiagonal runtime scaling vs (n, bw), against the
+host LAPACK baseline.
+
+The paper compares its GPU GBBRD against PLASMA/SLATE on a 32-core Xeon
+(offline here).  We report, per (n, bw): our wavefront GBBRD (stage 2+3,
+f32) wall time on this host, the full-dense ``numpy.linalg.svd`` (LAPACK
+gesdd) time, and the ratio — the same ratio-style table as Fig. 6.  On real
+TPU hardware the GBBRD column is the one the roofline model (EXPERIMENTS.md
+§Roofline-kernel) projects.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import banded, row, timeit
+from repro.core.svd import banded_singular_values
+
+CASES = [(256, 8), (256, 32), (512, 8), (512, 32)]
+
+
+def run() -> list[str]:
+    out = []
+    for n, bw in CASES:
+        a = banded(n, bw, seed=2, dtype="float32")
+        aj = jnp.asarray(a)
+        tw = max(bw // 4, 1)
+        ours = lambda x: banded_singular_values(x, bw=bw, tw=tw, backend="ref")
+        t_ours = timeit(ours, aj, warmup=1, iters=3)
+        t_ref = timeit(lambda: np.linalg.svd(a, compute_uv=False), iters=3)
+        out.append(row(f"fig6/n{n}_bw{bw}", t_ours * 1e6,
+                       f"lapack_us={t_ref * 1e6:.0f};"
+                       f"ratio_vs_lapack={t_ref / t_ours:.2f}"))
+    return out

@@ -1,0 +1,38 @@
+"""Distributed spectral analysis: batch-dispatch the paper's pipeline across a
+mesh (the pod-scale production pattern: one matrix per device group, zero
+collectives during the chase).
+
+Run with fake devices to see the sharded path:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/distributed_spectra.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.distributed import batched_singular_values, sharded_singular_values
+
+B, n = 8, 96
+rng = np.random.default_rng(0)
+mats = jnp.asarray(rng.standard_normal((B, n, n)))
+
+if len(jax.devices()) > 1:
+    ndev = len(jax.devices())
+    mesh = jax.make_mesh((ndev,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    print(f"sharding {B} matrices over {ndev} devices")
+    sig = sharded_singular_values(mats, mesh, bw=16, tw=8, backend="ref")
+else:
+    print(f"single device: vmapped batch of {B}")
+    sig = batched_singular_values(mats, bw=16, tw=8, backend="ref")
+
+sig = np.asarray(sig)
+for i in range(B):
+    ref = np.linalg.svd(np.asarray(mats[i]), compute_uv=False)
+    err = np.max(np.abs(sig[i] - ref)) / ref[0]
+    assert err < 1e-9, (i, err)
+print(f"sigma_max per matrix: {sig[:, 0].round(3)}")
+print("all spectra match LAPACK to 1e-9.  OK")

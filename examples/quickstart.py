@@ -1,0 +1,45 @@
+"""Quickstart: the paper's contribution in five lines, then the pipeline.
+
+Computes all singular values of (1) a banded matrix via the memory-aware
+bulge-chasing reduction (the paper's stage 2 + stage 3), and (2) a dense
+matrix via the full three-stage pipeline — validated against numpy on the
+spot.  Runs on CPU in seconds.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import banded_singular_values, singular_values
+from repro.core.tuning import ChaseConfig
+
+# --- 1. banded matrix -> singular values (the paper's direct use case) ------
+n, bw = 256, 16
+rng = np.random.default_rng(0)
+a = np.triu(rng.standard_normal((n, n)))
+a = np.triu(a) - np.triu(a, bw + 1)                  # upper banded, bw=16
+
+cfg = ChaseConfig.resolve(n, bw, jnp.float64)
+print(f"banded {n}x{n}, bandwidth {bw}: tilewidth={cfg.tw}, "
+      f"max concurrent sweeps={cfg.max_sweeps}")
+
+sigma = banded_singular_values(jnp.asarray(a), bw=bw, tw=cfg.tw, backend="ref")
+ref = np.linalg.svd(a, compute_uv=False)
+err = np.max(np.abs(np.asarray(sigma) - ref)) / ref[0]
+print(f"sigma[0..4] = {np.asarray(sigma[:5]).round(4)}")
+print(f"max rel err vs LAPACK: {err:.2e}")
+assert err < 1e-10
+
+# --- 2. dense matrix -> three-stage pipeline ---------------------------------
+m = 128
+d = rng.standard_normal((m, m))
+sigma2 = singular_values(jnp.asarray(d), bw=16, tw=8, backend="ref")
+ref2 = np.linalg.svd(d, compute_uv=False)
+err2 = np.max(np.abs(np.asarray(sigma2) - ref2)) / ref2[0]
+print(f"dense {m}x{m} three-stage pipeline: max rel err {err2:.2e}")
+assert err2 < 1e-10
+print("OK")

@@ -1,0 +1,41 @@
+"""Serve a small model with batched requests (continuous batching engine).
+
+Mixed prompt lengths and token budgets arrive in a queue; the engine packs
+them into fixed KV-cache slots with per-slot positions and decodes lock-step,
+refilling slots as requests finish — static shapes, no recompilation.
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import time
+
+import numpy as np
+import jax
+
+from repro.configs.base import smoke_of
+from repro.models import build
+from repro.serve import Engine, Request, ServeConfig
+
+cfg = smoke_of("hymba-1.5b")        # hybrid attn+mamba arch, KV+state caches
+model = build(cfg)
+params = model.init(jax.random.PRNGKey(0))
+eng = Engine(model, params, ServeConfig(max_batch=4, max_seq=64))
+
+rng = np.random.default_rng(7)
+n_requests = 10
+for uid in range(n_requests):
+    plen = int(rng.integers(2, 12))
+    eng.submit(Request(uid=uid,
+                       prompt=list(map(int, rng.integers(1, cfg.vocab, plen))),
+                       max_new_tokens=int(rng.integers(4, 12))))
+
+t0 = time.time()
+done = eng.run()
+dt = time.time() - t0
+ntok = sum(len(r.output) for r in done)
+for r in sorted(done, key=lambda r: r.uid)[:5]:
+    print(f"req {r.uid:2d} ({len(r.output):2d} tokens): {r.output}")
+print(f"{len(done)} requests, {ntok} tokens in {dt:.1f}s "
+      f"({ntok / max(dt, 1e-9):.1f} tok/s on CPU smoke config)")
+assert len(done) == n_requests
+print("OK")

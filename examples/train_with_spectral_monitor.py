@@ -1,0 +1,72 @@
+"""End-to-end driver: train a (reduced) assigned architecture for a few
+hundred steps with the paper's SVD engine in the loop.
+
+Demonstrates: deterministic data pipeline, AdamW + cosine schedule, spectral
+monitoring (banded bulge-chasing SVD of the weight matrices every N steps),
+spectral gradient clipping, checkpointing with crash-restart, straggler
+detection.
+
+  PYTHONPATH=src python examples/train_with_spectral_monitor.py
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import smoke_of
+from repro.models import build
+from repro.train import (AdamWConfig, DataConfig, FailureInjector,
+                         StragglerMonitor, Trainer, batch_at, checkpoint,
+                         run_with_restarts)
+from repro.train.spectral import SpectralMonitor, SpectralMonitorConfig
+
+STEPS = 200
+cfg = smoke_of("granite-3-2b")
+model = build(cfg)
+trainer = Trainer(model, AdamWConfig(peak_lr=2e-3, warmup_steps=10,
+                                     total_steps=STEPS, spectral_clip=2.0))
+dc = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8, seed=42)
+monitor = SpectralMonitor(SpectralMonitorConfig(every=50, size=64, bw=16,
+                                                backend="ref"))
+straggler = StragglerMonitor()
+jstep = jax.jit(trainer.make_train_step())
+
+ckpt_dir = tempfile.mkdtemp(prefix="repro_example_")
+print(f"checkpoints -> {ckpt_dir}")
+
+
+def make_state():
+    return trainer.init_state(jax.random.PRNGKey(0))
+
+
+def restore_state(step, template):
+    return checkpoint.restore(ckpt_dir, step, template)
+
+
+def step_fn(step, state):
+    batch = {k: jnp.asarray(v) for k, v in batch_at(dc, step).items()}
+    monitor.maybe_refresh(step, state["params"])
+    state, metrics = jstep(state, batch, monitor.sigma_max_tree())
+    if step % 25 == 0:
+        sm = monitor.metrics()
+        srank = next((v for k, v in sm.items() if "stable_rank" in k), 0.0)
+        print(f"step {step:4d}  loss {float(metrics['loss']):.4f}  "
+              f"grad_norm {float(metrics['grad_norm']):.2f}  "
+              f"stable_rank {srank:.1f}")
+    return state, {"loss": float(metrics["loss"])}
+
+
+# inject a crash at step 120 — the restart loop restores and the final
+# trajectory is identical to an uninterrupted run (pure-function data +
+# atomic checkpoints)
+state, history, restarts = run_with_restarts(
+    total_steps=STEPS, ckpt_dir=ckpt_dir, make_state=make_state,
+    restore_state=restore_state, step_fn=step_fn, save_every=40,
+    injector=FailureInjector(fail_at=(120,)), monitor=straggler)
+
+losses = [m["loss"] for _, m in history]
+print(f"done: {len(history)} recorded steps, {restarts} restart(s), "
+      f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+assert restarts == 1 and losses[-1] < losses[0]
+print("OK")

@@ -1,0 +1,3 @@
+"""repro.configs — assigned architectures + shape suites."""
+from repro.configs.base import ModelConfig, get_config, list_configs, smoke_of
+from repro.configs.shapes import SUITES, ShapeSuite, cells, applicable

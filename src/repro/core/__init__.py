@@ -1,0 +1,13 @@
+"""repro.core — the paper's contribution: memory-aware bulge-chasing
+band->bidiagonal reduction, plus the surrounding three-stage SVD pipeline."""
+
+from repro.core.band import pack, unpack, band_height, bandwidth_of
+from repro.core.householder import make_reflector, apply_left, apply_right
+from repro.core.bulge_chasing import (
+    bidiagonalize, bidiagonalize_packed, reduce_stage_packed,
+    reduce_stage_dense_ref, bidiagonalize_dense_ref, stage_schedule, tw_schedule,
+)
+from repro.core.stage1 import band_reduce
+from repro.core.bidiag_svd import bidiag_singular_values
+from repro.core.svd import singular_values, banded_singular_values, bidiagonal_of
+from repro.core.tuning import ChaseConfig, default_tilewidth, occupancy_matrix_size

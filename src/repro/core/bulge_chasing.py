@@ -1,0 +1,301 @@
+"""Band -> bidiagonal reduction via memory-aware bulge chasing (paper Alg. 1).
+
+Two implementations:
+
+* ``reduce_stage_dense_ref`` / ``bidiagonalize_dense_ref`` — sequential numpy
+  oracle (float64, full-range reflector applies).  Obviously orthogonally
+  equivalent; used as the ground truth in tests.
+
+* ``reduce_stage_packed`` / ``bidiagonalize_packed`` — the production JAX path:
+  static-shape wavefront execution on packed band storage.  Per global cycle
+  ``t`` every in-flight sweep executes one chase cycle; the paper's 3-cycle
+  separation guarantees the per-sweep windows are disjoint
+  (stride between concurrent pivots = ``3*b_in - 1`` > window width
+  ``b_in + tw + 1``), so all windows are gathered, processed by one batched
+  kernel call (Pallas on TPU / interpret or pure-jnp on CPU), and scattered
+  back race-free.
+
+Scheduling (stage reduces bandwidth ``b_in -> b_out = b_in - tw``):
+
+  sweep R (R = 0..n-2-b_out) starts at global cycle 3R;
+  at local cycle j it owns pivot column  p = R + b_out + j*b_in;
+  cycle j=0 annihilates row R's outermost ``tw`` band elements
+  (columns p+1..p+tw, pivot p) — paper Alg. 1 line 7 start correction;
+  cycle j>0 annihilates the row bulge of row r = p - b_in;
+  each cycle then annihilates the column bulge of pivot column p.
+
+The window of one cycle covers matrix rows [p - b_in - tw, p + tw] and columns
+[p, p + b_in + tw] — "1 + BW + TW consecutive elements" (paper §III-A) — and is
+*rolled* so matrix rows align with window rows (dense tile), turning the
+band-storage diagonal access pattern into contiguous VPU-friendly tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import band as bandmod
+
+__all__ = [
+    "reduce_stage_dense_ref",
+    "bidiagonalize_dense_ref",
+    "reduce_stage_packed",
+    "bidiagonalize_packed",
+    "bidiagonalize",
+    "chase_cycle_indices",
+    "stage_schedule",
+]
+
+
+# ---------------------------------------------------------------------------
+# Sequential dense oracle (numpy, float64)
+# ---------------------------------------------------------------------------
+
+def _np_reflector(x: np.ndarray):
+    alpha = x[0]
+    sigma = float(np.dot(x[1:], x[1:]))
+    if sigma == 0.0:
+        return None, 0.0, alpha
+    mu = math.sqrt(alpha * alpha + sigma)
+    beta = -mu if alpha >= 0 else mu
+    tau = (beta - alpha) / beta
+    v = np.concatenate([[1.0], x[1:] / (alpha - beta)])
+    return v, tau, beta
+
+
+def reduce_stage_dense_ref(a: np.ndarray, b_in: int, tw: int) -> np.ndarray:
+    """One SBR stage, sequential, full-range applies. a: (n, n) float64."""
+    a = np.array(a, dtype=np.float64)
+    n = a.shape[0]
+    b_out = b_in - tw
+    assert b_out >= 1
+    for R in range(0, max(n - 1 - b_out, 0)):
+        p = R + b_out
+        r = R
+        while p <= n - 1:
+            hi = min(p + tw + 1, n)
+            # right reflector: annihilate a[r, p+1:hi]
+            v, tau, beta = _np_reflector(a[r, p:hi])
+            if tau != 0.0:
+                w = a[:, p:hi] @ v
+                a[:, p:hi] -= tau * np.outer(w, v)
+                a[r, p + 1 : hi] = 0.0
+                a[r, p] = beta
+            # left reflector: annihilate a[p+1:hi, p]
+            v, tau, beta = _np_reflector(a[p:hi, p])
+            if tau != 0.0:
+                w = v @ a[p:hi, :]
+                a[p:hi, :] -= tau * np.outer(v, w)
+                a[p + 1 : hi, p] = 0.0
+                a[p, p] = beta
+            r = p
+            p = p + b_in
+    return a
+
+
+def bidiagonalize_dense_ref(a: np.ndarray, bw: int, tw: int):
+    """Full SBR to bidiagonal: stages bw -> bw-tw -> ... -> 1. Returns (d, e, A)."""
+    a = np.array(a, dtype=np.float64)
+    b = bw
+    while b > 1:
+        twi = min(tw, b - 1)
+        a = reduce_stage_dense_ref(a, b, twi)
+        b -= twi
+    n = a.shape[0]
+    d = np.diagonal(a).copy()
+    e = np.diagonal(a, 1).copy()
+    return d, e, a
+
+
+def bidiagonalize_dense_ref_uv(a: np.ndarray, bw: int, tw: int):
+    """SBR with transform accumulation: A = U B V^T with B bidiagonal.
+
+    The paper computes singular values only and names vector accumulation as
+    future work (§VII); this oracle-level extension accumulates the left/right
+    reflector products alongside the chase (each chase reflector also updates
+    U's columns / V's columns — O(n * tw) extra per cycle, the same wavefront
+    parallelism applies).  Returns (d, e, U, V) with U^T A V == B.
+    """
+    a = np.array(a, dtype=np.float64)
+    n = a.shape[0]
+    u = np.eye(n)
+    v = np.eye(n)
+    b = bw
+    while b > 1:
+        twi = min(tw, b - 1)
+        b_out = b - twi
+        for R in range(0, max(n - 1 - b_out, 0)):
+            p = R + b_out
+            r = R
+            while p <= n - 1:
+                hi = min(p + twi + 1, n)
+                vec, tau, beta = _np_reflector(a[r, p:hi])
+                if tau != 0.0:
+                    w = a[:, p:hi] @ vec
+                    a[:, p:hi] -= tau * np.outer(w, vec)
+                    a[r, p + 1 : hi] = 0.0
+                    a[r, p] = beta
+                    wv = v[:, p:hi] @ vec
+                    v[:, p:hi] -= tau * np.outer(wv, vec)
+                vec, tau, beta = _np_reflector(a[p:hi, p])
+                if tau != 0.0:
+                    w = vec @ a[p:hi, :]
+                    a[p:hi, :] -= tau * np.outer(vec, w)
+                    a[p + 1 : hi, p] = 0.0
+                    a[p, p] = beta
+                    wu = u[:, p:hi] @ vec
+                    u[:, p:hi] -= tau * np.outer(wu, vec)
+                r = p
+                p = p + b
+        b -= twi
+    d = np.diagonal(a).copy()
+    e = np.diagonal(a, 1).copy()
+    return d, e, u, v
+
+
+# ---------------------------------------------------------------------------
+# Wavefront schedule helpers
+# ---------------------------------------------------------------------------
+
+def stage_schedule(n: int, b_in: int, tw: int) -> tuple[int, int, int]:
+    """(n_sweeps, total_cycles, max_concurrent) for one stage."""
+    b_out = b_in - tw
+    nsweeps = max(n - 1 - b_out, 0)
+    if nsweeps == 0:
+        return 0, 0, 1
+    last = nsweeps - 1
+    max_j_last = max((n - 1 - last - b_out) // b_in, 0)
+    total = 3 * last + max_j_last + 1
+    conc = max(1, -(-n // (3 * b_in - 1)) + 1)
+    return nsweeps, total, conc
+
+
+def chase_cycle_indices(t, g, n: int, b_in: int, tw: int):
+    """Vectorized slot -> (sweep, local cycle, pivot, active, is_first).
+
+    Slot g at global cycle t hosts sweep R = t//3 - g at local cycle
+    j = t - 3R = t%3 + 3g.  Works on traced or static ints.
+    """
+    b_out = b_in - tw
+    nsweeps = max(n - 1 - b_out, 0)
+    R = t // 3 - g
+    j = t - 3 * R
+    p = R + b_out + j * b_in
+    active = (R >= 0) & (R < nsweeps) & (p <= n - 1)
+    return R, j, p, active, (j == 0)
+
+
+# ---------------------------------------------------------------------------
+# Packed wavefront stage (JAX)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n", "b_in", "tw", "backend", "unroll"))
+def reduce_stage_packed(band: jax.Array, *, n: int, b_in: int, tw: int,
+                        backend: str = "auto", unroll: int = 1) -> jax.Array:
+    """One SBR stage on packed band storage.
+
+    band: (b_in + 2*tw + 1, >= n).  Returns same-shape storage with bandwidth
+    reduced to ``b_in - tw`` (bulge space zeroed).
+    """
+    from repro.kernels import ops  # local import to avoid cycles
+
+    b_out = b_in - tw
+    assert b_out >= 1, (b_in, tw)
+    H = b_in + 2 * tw + 1
+    W = b_in + tw + 1
+    assert band.shape[0] == H, (band.shape, H)
+    nsweeps, T, G = stage_schedule(n, b_in, tw)
+    if nsweeps == 0 or T == 0:
+        return band
+
+    ncols0 = band.shape[1]
+    dump = n + W                      # start of per-slot dump zones (inactive slots)
+    n_pad = dump + G * W
+    bandp = bandmod.pad_columns(band, max(n_pad - ncols0, 0))
+
+    yy = jnp.arange(H)[:, None]                      # (H, 1)
+    ww = jnp.arange(W)[None, :]                      # (1, W)
+    d_gather = jnp.clip(H - 1 + ww - yy, 0, H - 1)   # (H, W) band row per window cell
+    gather_valid = yy >= ww                          # window cell maps into storage
+    dd = jnp.arange(H)[:, None]
+    y_back = jnp.clip(H - 1 + ww - dd, 0, H - 1)     # (H, W) window row per band cell
+    back_valid = dd >= ww
+    g_idx = jnp.arange(G)
+
+    def cycle(t, bandp):
+        _, _, p, active, is_first = chase_cycle_indices(t, g_idx, n, b_in, tw)
+        p_safe = jnp.where(active, p, dump + g_idx * W).astype(jnp.int32)
+        cols = p_safe[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]   # (G, W)
+        # gather rolled dense windows: (G, H, W)
+        win = bandp[d_gather[None], cols[:, None, :]]
+        win = jnp.where(gather_valid[None], win, 0)
+        out = ops.chase_cycle(win, is_first, b_in=b_in, tw=tw, backend=backend)
+        out = jnp.where(active[:, None, None], out, win)
+        # shear back to band coords and scatter
+        orig = bandp[jnp.arange(H)[None, :, None], cols[:, None, :]]       # (G, H, W)
+        vals = out[g_idx[:, None, None], y_back[None], ww[None]]
+        vals = jnp.where(back_valid[None], vals, orig)
+        return bandp.at[jnp.arange(H)[None, :, None], cols[:, None, :]].set(vals)
+
+    bandp = jax.lax.fori_loop(0, T, cycle, bandp, unroll=unroll)
+    return bandp[:, :ncols0]
+
+
+def tw_schedule(bw: int, tw: int) -> list[tuple[int, int]]:
+    """[(b_in, tw_i), ...] stage plan reducing bw -> 1 by <= tw per stage."""
+    plan = []
+    b = bw
+    while b > 1:
+        twi = min(tw, b - 1)
+        plan.append((b, twi))
+        b -= twi
+    return plan
+
+
+def bidiagonalize_packed(band: jax.Array, *, n: int, bw: int, tw: int,
+                         backend: str = "auto") -> tuple[jax.Array, jax.Array]:
+    """Full SBR bw -> 1 on packed storage. Returns (diag, superdiag).
+
+    ``band`` must be packed with tw_0 = min(tw, bw-1) sub rows, i.e. via
+    ``band.pack(a, bw, min(tw, bw-1))``.  Host loop over stages (static,
+    <= ceil((bw-1)/tw) iterations); each stage jits once per shape.
+
+    Storage layout invariant entering each stage (b_in, tw_i):
+      tw_i sub rows | diag row | b_in + tw_i sup rows  ==  b_in + 2*tw_i + 1.
+    Between stages the storage is re-sliced (outer diagonals are now zero).
+    """
+    plan = tw_schedule(bw, tw)
+    if not plan:
+        h = band.shape[0]
+        tw0 = (h - 2) // 2 if h > 2 else 0
+        d = bandmod.band_extract_diag(band, tw0, 0, n)
+        e = bandmod.band_extract_diag(band, tw0, 1, n) if bw >= 1 else jnp.zeros(n, band.dtype)
+        return d, e
+    cur = band
+    tw_cur = plan[0][1]
+    assert cur.shape[0] == plan[0][0] + 2 * tw_cur + 1, (cur.shape, plan[0])
+    for b_in, twi in plan:
+        # re-slice so exactly twi sub rows remain above the diagonal row
+        h_i = b_in + 2 * twi + 1
+        start = tw_cur - twi
+        if start != 0 or cur.shape[0] != h_i:
+            cur = jax.lax.slice_in_dim(cur, start, start + h_i, axis=0)
+        cur = reduce_stage_packed(cur, n=n, b_in=b_in, tw=twi, backend=backend)
+        tw_cur = twi
+    d = bandmod.band_extract_diag(cur, tw_cur, 0, n)
+    e = bandmod.band_extract_diag(cur, tw_cur, 1, n)
+    return d, e
+
+
+def bidiagonalize(a: jax.Array, *, bw: int, tw: int, backend: str = "auto"
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Dense upper-banded (n, n) -> (diag, superdiag) via packed wavefront SBR."""
+    n = a.shape[0]
+    tw0 = min(tw, max(bw - 1, 1))
+    packed = bandmod.pack(a, bw, tw0)
+    return bidiagonalize_packed(packed, n=n, bw=bw, tw=tw, backend=backend)

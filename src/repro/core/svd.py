@@ -1,0 +1,48 @@
+"""Three-stage singular value pipeline (paper §I):
+
+  dense --stage1--> banded --stage2 (paper: bulge chasing)--> bidiagonal
+        --stage3--> singular values
+
+``singular_values`` runs all three stages on-device; ``banded_singular_values``
+enters at stage 2 (the paper's direct use case: banded inputs from spectral
+PDE methods etc.).  All functions are jit-friendly and dtype-polymorphic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import band as bandmod
+from repro.core import bulge_chasing as bc
+from repro.core import stage1 as s1
+from repro.core import bidiag_svd as s3
+from repro.core import tuning
+
+__all__ = ["singular_values", "banded_singular_values", "bidiagonal_of"]
+
+
+def bidiagonal_of(a: jax.Array, *, bw: int, tw: int | None = None,
+                  backend: str = "auto") -> tuple[jax.Array, jax.Array]:
+    """Stage 2 only: dense upper-banded (n,n) -> (diag, superdiag)."""
+    n = a.shape[0]
+    if tw is None:
+        tw = tuning.default_tilewidth(bw, a.dtype)
+    return bc.bidiagonalize(a, bw=bw, tw=tw, backend=backend)
+
+
+def banded_singular_values(a: jax.Array, *, bw: int, tw: int | None = None,
+                           backend: str = "auto") -> jax.Array:
+    """Singular values of an upper-banded matrix (stages 2+3), descending."""
+    d, e = bidiagonal_of(a, bw=bw, tw=tw, backend=backend)
+    return s3.bidiag_singular_values(d, e)
+
+
+@functools.partial(jax.jit, static_argnames=("bw", "tw", "backend"))
+def singular_values(a: jax.Array, *, bw: int = 32, tw: int | None = None,
+                    backend: str = "auto") -> jax.Array:
+    """All singular values of a dense (n, n) matrix, descending (3 stages)."""
+    banded = s1.band_reduce(a, nb=bw)
+    return banded_singular_values(banded, bw=bw, tw=tw, backend=backend)

@@ -1,0 +1,94 @@
+"""Hyperparameter heuristics and the occupancy/performance model (paper §III-C/D).
+
+The paper exposes three knobs — inner tilewidth TW, threads-per-block TPB, and
+max concurrent blocks — and shows (Fig. 4) that the dominant one is TW, whose
+optimum matches the cache-line width (32 for fp32, 16 for fp64 on 128-byte
+lines).  The TPU translation:
+
+* TW         -> still the dominant knob.  The analogue of "fill one cache line"
+               is "fill one 128-lane vreg row": reflector length TW+1 padded to
+               the lane count.  bf16 packs 2/lane-row, fp32 1.
+* TPB        -> ROWS_PER_STEP: how many band rows one grid step applies the
+               reflector to per VREG pass (sublane tiling, multiples of 8).
+* max blocks -> MAX_CONCURRENT_SWEEPS per core (wavefront width hosted by one
+               TensorCore's grid) — beyond it, sweeps serialize in the grid,
+               trading occupancy for VMEM locality exactly like the paper's
+               software loop unrolling.
+
+The occupancy model (paper Eq. 1): full utilization needs
+``n / (3 * CBW) >= execution_units``; for a TPU pod the execution unit is a
+TensorCore (2 per chip on v5e-class parts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = [
+    "default_tilewidth", "rows_per_step", "max_concurrent_sweeps",
+    "occupancy_matrix_size", "vmem_working_set_bytes", "ChaseConfig",
+]
+
+LANE = 128          # TPU vector lane count
+SUBLANE = 8         # TPU sublane count (f32)
+
+
+def _bytes(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def default_tilewidth(bw: int, dtype=jnp.float32) -> int:
+    """Paper Fig. 4: optimal TW fills one cache line; TPU: one lane row.
+
+    Reflector length TW+1; we pick TW so the VMEM window stays small while the
+    per-row apply saturates lanes.  Capped at bw-1 (cannot peel more than the
+    band).  fp32 -> 32, bf16 -> 64, fp64 (CPU oracle) -> 16, matching the
+    paper's per-precision optima scaled to the TPU lane granularity.
+    """
+    per_line = 128 // _bytes(dtype)      # elements per 128B GPU cache line
+    tw = max(8, min(per_line, LANE // 2))
+    return max(1, min(tw, bw - 1))
+
+
+def rows_per_step(b_in: int, tw: int, dtype=jnp.float32) -> int:
+    """TPB analogue: rows applied per VREG pass, sublane-aligned."""
+    rows = b_in + tw + 1
+    return min(64, max(SUBLANE, SUBLANE * (rows // SUBLANE)))
+
+
+def max_concurrent_sweeps(n: int, b_in: int) -> int:
+    """Wavefront width (paper: #blocks): ceil(n / (3*CBW - 1)) + 1 slots."""
+    return max(1, -(-n // (3 * b_in - 1)) + 1)
+
+
+def occupancy_matrix_size(cbw: int, execution_units: int) -> int:
+    """Paper Eq. 1 / Table I: min n saturating all execution units."""
+    return 3 * cbw * execution_units
+
+
+def vmem_working_set_bytes(b_in: int, tw: int, dtype=jnp.float32) -> int:
+    """One chase window (H x W) + reflectors, as staged in VMEM."""
+    h = b_in + 2 * tw + 1
+    w = b_in + tw + 1
+    return (h * w + 2 * (tw + 1)) * _bytes(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaseConfig:
+    """Resolved hyperparameters for one reduction stage."""
+    b_in: int
+    tw: int
+    rows_per_step: int
+    max_sweeps: int
+
+    @staticmethod
+    def resolve(n: int, b_in: int, dtype=jnp.float32, tw: int | None = None
+                ) -> "ChaseConfig":
+        tw = tw if tw is not None else default_tilewidth(b_in, dtype)
+        return ChaseConfig(
+            b_in=b_in, tw=tw,
+            rows_per_step=rows_per_step(b_in, tw, dtype),
+            max_sweeps=max_concurrent_sweeps(n, b_in),
+        )

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel for one wavefront of bulge-chase cycles (paper Alg. 2).
+
+Memory mapping (GPU -> TPU, DESIGN.md §2):
+
+* one thread block per sweep        -> one grid step per in-flight sweep
+* reflector in shared memory (L1)   -> reflector in VMEM-resident window block
+* TPB rows held in registers        -> row tiles materialized into VREGs from
+                                       the VMEM window by the vector unit
+* kernel-launch sync between cycles -> sequential grid steps + one
+                                       ``pallas_call`` per global cycle
+
+Each grid step owns one *rolled dense window* (H, W) of the packed band
+storage, H = b_in + 2*tw + 1, W = b_in + tw + 1 — the "1 + BW + TW" working
+set of the paper, staged HBM -> VMEM by the BlockSpec pipeline (double-
+buffered by Pallas, the TPU analogue of the paper's L1 residency), processed
+entirely in VMEM, and written back.
+
+The kernel is data-precision-agnostic (fp32/bf16; accumulation in fp32),
+mirroring the paper's precision-agnostic single-source claim.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["chase_cycle_pallas"]
+
+
+def _reflector_in_kernel(x, acc):
+    """larfg on a VREG-resident vector; tau=0 on zero tails (edge no-op)."""
+    xa = x.astype(acc)
+    alpha = xa[0]
+    sigma = jnp.sum(xa[1:] * xa[1:])
+    mu = jnp.sqrt(alpha * alpha + sigma)
+    beta = jnp.where(alpha >= 0, -mu, mu)
+    safe = sigma > 0
+    denom = jnp.where(safe, alpha - beta, 1.0)
+    tau = jnp.where(safe, (beta - alpha) / jnp.where(beta == 0, 1.0, beta), 0.0)
+    v = jnp.where(jnp.arange(x.shape[0]) > 0, xa / denom, 1.0)
+    return v, tau, jnp.where(safe, beta, alpha)
+
+
+def _chase_kernel(first_ref, win_ref, out_ref, *, b_in: int, tw: int):
+    h = b_in + 2 * tw + 1
+    w = b_in + tw + 1
+    dt = win_ref.dtype
+    acc = jnp.float32 if dt in (jnp.bfloat16, jnp.float16) else dt
+    win = win_ref[0]                                   # (H, W) in VMEM
+    first = first_ref[0, 0] != 0
+
+    # ---- right reflector: annihilate the TW-element row bulge ------------
+    # overhang row: y = tw (steady) or y = 2*tw (sweep's first cycle); rows in
+    # between are structurally zero in cols [0, tw], so the apply is a no-op
+    # on them — select statically instead of dynamic-slicing.
+    x = jnp.where(first, win[2 * tw, : tw + 1], win[tw, : tw + 1])
+    v, tau, beta = _reflector_in_kernel(x, acc)
+    blk = win[tw:, : tw + 1].astype(acc)               # rows [tw, H)
+    wdot = blk @ v
+    blk = blk - tau * wdot[:, None] * v[None, :]
+    win = win.at[tw:, : tw + 1].set(blk.astype(dt))
+    # structural zeros on the annihilated row
+    fix = jnp.zeros((tw + 1,), acc).at[0].set(beta).astype(dt)
+    hit = tau != 0
+    win = win.at[tw, : tw + 1].set(
+        jnp.where(hit & ~first, fix, win[tw, : tw + 1]))
+    win = win.at[2 * tw, : tw + 1].set(
+        jnp.where(hit & first, fix, win[2 * tw, : tw + 1]))
+
+    # ---- left reflector: annihilate the TW-element column bulge ----------
+    y0 = h - 1 - tw                                    # matrix row p (pivot)
+    xc = win[y0:, 0]
+    v2, tau2, beta2 = _reflector_in_kernel(xc, acc)
+    blk2 = win[y0:, :].astype(acc)                     # (tw+1, W)
+    w2 = v2 @ blk2
+    blk2 = blk2 - tau2 * v2[:, None] * w2[None, :]
+    colfix = jnp.zeros((tw + 1,), acc).at[0].set(beta2)
+    blk2 = blk2.at[:, 0].set(jnp.where(tau2 != 0, colfix, blk2[:, 0]))
+    win = win.at[y0:, :].set(blk2.astype(dt))
+
+    out_ref[0] = win
+
+
+@functools.partial(jax.jit, static_argnames=("b_in", "tw", "interpret"))
+def chase_cycle_pallas(windows: jax.Array, is_first: jax.Array, *, b_in: int,
+                       tw: int, interpret: bool = False) -> jax.Array:
+    """windows: (G, H, W) disjoint rolled windows; is_first: (G,) bool."""
+    g, h, w = windows.shape
+    assert h == b_in + 2 * tw + 1 and w == b_in + tw + 1, (windows.shape, b_in, tw)
+    first = is_first.astype(jnp.int32).reshape(g, 1)
+    kern = functools.partial(_chase_kernel, b_in=b_in, tw=tw)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(windows.shape, windows.dtype),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),        # is_first scalar
+            pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),  # window in VMEM
+        ],
+        out_specs=pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(first, windows)

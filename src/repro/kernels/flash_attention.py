@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: causal flash attention (forward).
+
+The §Perf A4 lever: materializing (s, s) score tensors makes dense-arch
+prefill memory-bound (EXPERIMENTS.md §Roofline).  This kernel streams KV
+blocks through VMEM with an online-softmax accumulator, so HBM traffic is
+O(s·d) instead of O(s²) — the same "size the working set to the fastest
+memory level" principle as the paper's chase kernel.
+
+Layout: q, k, v: (BH, S, D) (batch*heads collapsed; GQA callers repeat KV
+first).  Grid = (BH, S/bq); each step owns one q block in VMEM, loops over
+the causal prefix of KV blocks with running (m, l, acc).  Forward only —
+training integration needs the dq/dk/dv kernels (documented future work);
+serving prefill is the integration point.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, scale: float):
+    i = pl.program_id(1)
+    d = q_ref.shape[-1]
+    q = q_ref[0].astype(jnp.float32) * scale                  # (bq, d)
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (0, pl.dslice(j * bk, bk), slice(None))
+                    ).astype(jnp.float32)                     # (bk, d)
+        v = pl.load(v_ref, (0, pl.dslice(j * bk, bk), slice(None))
+                    ).astype(jnp.float32)
+        s = q @ k.T                                           # (bq, bk)
+        q_pos = i * bq + jnp.arange(bq)[:, None]
+        k_pos = j * bk + jnp.arange(bk)[None, :]
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=1)
+        acc_new = acc * corr[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    # causal: only KV blocks up to and including this q block's diagonal
+    # (ceil — when bk > bq the diagonal block still overlaps; masked in-body)
+    n_blocks = ((i + 1) * bq + bk - 1) // bk
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_q", "block_k", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """Causal attention, (BH, S, D) in/out.  S must divide by the blocks."""
+    bh, s, d = q.shape
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    assert s % bq == 0 and s % bk == 0 and (bq % bk == 0 or bk % bq == 0)
+    scale = 1.0 / (d ** 0.5)
+    kern = functools.partial(_flash_kernel, bq=bq, bk=bk, scale=scale)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        grid=(bh, s // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),   # q block
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),    # k resident
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),    # v resident
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: compact-WY blocked reflector apply (stage-1 hotspot).
+
+    C <- (I - V T V^T) C
+
+V: (m, k) reflector block (k = panel width, small), T: (k, k), C: (m, n).
+Grid tiles the columns of C; V and T stay VMEM-resident across grid steps
+(their index_map is constant, so the pipeline fetches them once), while C
+streams through in ``block_cols`` stripes — three MXU matmuls per stripe.
+This is the GEMM-dense counterpart of the memory-bound chase kernel: stage 1
+is where the paper's pipeline earns its "compute density" (paper §I).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["hh_block_apply_pallas"]
+
+
+def _wy_kernel(v_ref, t_ref, c_ref, o_ref):
+    acc = jnp.float32 if c_ref.dtype in (jnp.bfloat16, jnp.float16) else c_ref.dtype
+    v = v_ref[...].astype(acc)
+    t = t_ref[...].astype(acc)
+    c = c_ref[...].astype(acc)
+    w1 = jnp.dot(v.T, c, preferred_element_type=acc)       # (k, bc)
+    w2 = jnp.dot(t, w1, preferred_element_type=acc)        # (k, bc)
+    o_ref[...] = (c - jnp.dot(v, w2, preferred_element_type=acc)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_cols"))
+def hh_block_apply_pallas(v: jax.Array, t: jax.Array, c: jax.Array, *,
+                          interpret: bool = False, block_cols: int = 512
+                          ) -> jax.Array:
+    """C <- (I - V T V^T) C with column-striped pipelining."""
+    m, k = v.shape
+    n = c.shape[1]
+    bc = min(block_cols, n)
+    pad = (-n) % bc
+    cp = jnp.pad(c, ((0, 0), (0, pad))) if pad else c
+    grid = (cp.shape[1] // bc,)
+    out = pl.pallas_call(
+        _wy_kernel,
+        out_shape=jax.ShapeDtypeStruct(cp.shape, c.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), lambda i: (0, 0)),     # V resident
+            pl.BlockSpec((k, k), lambda i: (0, 0)),     # T resident
+            pl.BlockSpec((m, bc), lambda i: (0, i)),    # C streamed
+        ],
+        out_specs=pl.BlockSpec((m, bc), lambda i: (0, i)),
+        interpret=interpret,
+    )(v, t, cp)
+    return out[:, :n] if pad else out

@@ -1,0 +1,79 @@
+"""jit'd public wrappers for the Pallas kernels, with backend dispatch.
+
+Backends:
+  "ref"       — pure-jnp oracle (kernels/ref.py), any platform.
+  "pallas"    — Pallas TPU kernel; on CPU runs in interpret mode (correctness).
+  "auto"      — pallas on TPU, ref elsewhere (CPU containers validate the
+                kernels separately through the interpret-mode test sweeps).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import ref as _ref
+
+__all__ = ["chase_cycle", "hh_block_apply", "flash_attention"]
+
+
+def _platform() -> str:
+    return jax.devices()[0].platform
+
+
+@functools.partial(jax.jit, static_argnames=("b_in", "tw", "backend", "interpret"))
+def chase_cycle(windows: jax.Array, is_first: jax.Array, *, b_in: int, tw: int,
+                backend: str = "auto", interpret: bool | None = None) -> jax.Array:
+    """Process one wavefront of bulge-chase cycles.
+
+    windows: (G, H, W) rolled dense windows (disjoint); is_first: (G,) bool.
+    """
+    if backend == "auto":
+        backend = "pallas" if _platform() == "tpu" else "ref"
+    if backend == "ref":
+        return _ref.chase_cycle_ref(windows, is_first, b_in=b_in, tw=tw)
+    if backend == "pallas":
+        from repro.kernels import bulge_chase
+        if interpret is None:
+            interpret = _platform() != "tpu"
+        return bulge_chase.chase_cycle_pallas(
+            windows, is_first, b_in=b_in, tw=tw, interpret=interpret)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "interpret", "block_cols"))
+def hh_block_apply(v: jax.Array, t: jax.Array, c: jax.Array, *,
+                   backend: str = "auto", interpret: bool | None = None,
+                   block_cols: int = 512) -> jax.Array:
+    """C <- (I - V T V^T) C — stage-1 WY blocked reflector apply."""
+    if backend == "auto":
+        backend = "pallas" if _platform() == "tpu" else "ref"
+    if backend == "ref":
+        return _ref.hh_block_apply_ref(v, t, c)
+    if backend == "pallas":
+        from repro.kernels import hh_apply
+        if interpret is None:
+            interpret = _platform() != "tpu"
+        return hh_apply.hh_block_apply_pallas(v, t, c, interpret=interpret,
+                                              block_cols=block_cols)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "interpret",
+                                             "block_q", "block_k"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    backend: str = "auto", interpret: bool | None = None,
+                    block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """Causal attention (BH, S, D): O(s*d) HBM traffic on TPU (Pallas)."""
+    if backend == "auto":
+        backend = "pallas" if _platform() == "tpu" else "ref"
+    if backend == "ref":
+        return _ref.flash_attention_ref(q, k, v)
+    if backend == "pallas":
+        from repro.kernels import flash_attention as fa
+        if interpret is None:
+            interpret = _platform() != "tpu"
+        return fa.flash_attention_pallas(q, k, v, block_q=block_q,
+                                         block_k=block_k, interpret=interpret)
+    raise ValueError(f"unknown backend {backend!r}")

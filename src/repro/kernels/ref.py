@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+``chase_cycle_ref`` is the reference for ``kernels/bulge_chase.py``; it operates on
+*rolled dense windows* of the packed band storage (see core/bulge_chasing.py for the
+rolling scheme).  One window = one bulge-chase cycle of one sweep (paper Alg. 2):
+
+  window[y, w] = A[i0 + y, p + w],   i0 = p - b_in - tw,
+  H = b_in + 2*tw + 1,  W = b_in + tw + 1   ("1 + BW + TW consecutive elements")
+
+Cycle = (1) right reflector annihilating the TW-element row bulge of row
+``r = p - b_in`` (or ``r = R = p - b_out`` on a sweep's first cycle — paper Alg. 1
+line 7), then (2) left reflector annihilating the TW-element column bulge of the
+pivot column ``p``, applied to all W window columns.
+
+``hh_block_apply_ref`` is the oracle for the stage-1 WY blocked reflector apply.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.householder import make_reflector
+
+__all__ = ["chase_window_ref", "chase_cycle_ref", "hh_block_apply_ref",
+           "flash_attention_ref"]
+
+
+def chase_window_ref(window: jax.Array, is_first: jax.Array, *, b_in: int, tw: int) -> jax.Array:
+    """Process one chase cycle on a rolled dense window.
+
+    window: (H, W) with H = b_in + 2*tw + 1, W = b_in + tw + 1.
+    is_first: scalar bool — first cycle of its sweep (overhang row at y=2*tw
+    instead of y=tw; the rows in between are already-reduced zeros, so the
+    unconditional apply over y >= tw is a no-op on them).
+    """
+    H, W = window.shape
+    assert H == b_in + 2 * tw + 1 and W == b_in + tw + 1, (H, W, b_in, tw)
+    dt = window.dtype
+
+    # ---- right reflector: annihilate row bulge, columns [0, tw] of row y_r ----
+    y_r = jnp.where(is_first, 2 * tw, tw)
+    x = jax.lax.dynamic_slice(window, (y_r, 0), (1, tw + 1))[0]
+    v, tau, beta = make_reflector(x)
+    blk = window[tw:, : tw + 1]                                   # rows [tw, H)
+    w_dot = blk @ v                                               # (H - tw,)
+    blk = blk - tau * jnp.outer(w_dot, v)
+    window = window.at[tw:, : tw + 1].set(blk.astype(dt))
+    # structural zeros for the annihilated row (avoid round-off debris)
+    row_fix = jnp.zeros((1, tw + 1), dt).at[0, 0].set(beta)
+    keep = jax.lax.dynamic_slice(window, (y_r, 0), (1, tw + 1))
+    row_fix = jnp.where(tau != 0, row_fix, keep)
+    window = jax.lax.dynamic_update_slice(window, row_fix, (y_r, 0))
+
+    # ---- left reflector: annihilate column bulge of pivot column (w=0) ----
+    y0 = H - 1 - tw                                               # matrix row p
+    xc = window[y0:, 0]
+    v2, tau2, beta2 = make_reflector(xc)
+    blk2 = window[y0:, :]                                         # (tw+1, W)
+    w2 = v2 @ blk2
+    blk2 = blk2 - tau2 * jnp.outer(v2, w2)
+    col_fix = jnp.zeros((tw + 1,), dt).at[0].set(beta2)
+    col_fix = jnp.where(tau2 != 0, col_fix, blk2[:, 0].astype(dt))
+    blk2 = blk2.astype(dt).at[:, 0].set(col_fix)
+    window = window.at[y0:, :].set(blk2)
+    return window
+
+
+def chase_cycle_ref(windows: jax.Array, is_first: jax.Array, *, b_in: int, tw: int) -> jax.Array:
+    """vmapped oracle over a batch of disjoint windows: (G, H, W)."""
+    fn = lambda w, f: chase_window_ref(w, f, b_in=b_in, tw=tw)
+    return jax.vmap(fn)(windows, is_first)
+
+
+def hh_block_apply_ref(v: jax.Array, t: jax.Array, c: jax.Array) -> jax.Array:
+    """WY blocked reflector apply oracle:  C <- (I - V T V^T) C.
+
+    v: (m, k) unit-lower-trapezoidal reflector block, t: (k, k) upper-triangular
+    compact-WY factor, c: (m, ncols).
+    """
+    acc = jnp.float32 if c.dtype in (jnp.bfloat16, jnp.float16) else c.dtype
+    vv, tt, cc = v.astype(acc), t.astype(acc), c.astype(acc)
+    w = vv.T @ cc
+    out = cc - vv @ (tt @ w)
+    return out.astype(c.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Oracle for kernels/flash_attention.py: plain causal softmax attention.
+
+    q, k, v: (BH, S, D)."""
+    s_len = q.shape[1]
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    scores = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = jnp.tril(jnp.ones((s_len, s_len), bool))
+    scores = jnp.where(mask[None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bst,btd->bsd", w, v.astype(jnp.float32)).astype(q.dtype)

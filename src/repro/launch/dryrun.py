@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST run in a fresh process (the XLA flag above is read at first jax init —
+it is set before ANY other import, including jax).  For each cell we:
+
+  1. build ShapeDtypeStruct stand-ins for params / optimizer state / batch /
+     caches (no allocation),
+  2. jit the step with explicit in/out shardings from the logical rules,
+  3. ``.lower().compile()`` on the production mesh,
+  4. record memory_analysis / cost_analysis / loop-scaled HLO costs +
+     collective schedule (repro.roofline) into reports/dryrun/<cell>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import get_config, list_configs
+from repro.configs.shapes import SUITES, cells
+from repro.launch.mesh import make_production_mesh, rules_for
+from repro.models import batch_logical, build, input_specs
+from repro.parallel.sharding import param_shardings, use_rules, zero1_shardings
+from repro.roofline import analyze, hw
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "reports", "dryrun")
+
+
+def _prune_spec(spec: P, shape, mesh) -> P:
+    """Drop sharding on dims the mesh axes don't divide (in_shardings must be
+    exactly divisible; GSPMD-padded uneven sharding only applies to internal
+    constraints, not argument layouts)."""
+    out = []
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for dim, ax in zip(shape, entries):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        out.append(ax if dim % n == 0 else None)
+    return P(*out)
+
+
+def _sds(shape_tree, logical_tree, dtype_fn, rules):
+    """ShapeDtypeStruct tree with NamedShardings from logical axes (pruned to
+    divisible dims)."""
+    mesh = rules.mesh
+
+    def one(shp, logical):
+        spec = _prune_spec(rules.spec(logical), shp, mesh)
+        return jax.ShapeDtypeStruct(shp, dtype_fn(shp),
+                                    sharding=NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(
+        one, shape_tree, logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, int) for e in x))
+
+
+def state_specs(model, trainer, rules):
+    """Abstract train state (params + AdamW moments) with shardings."""
+    cfg = model.cfg
+    mesh = rules.mesh
+    logical = model.param_logical()
+    shapes = model.param_shapes()
+    m_sh = zero1_shardings(logical, shapes, rules, trainer.dp_axes)
+    dt = cfg.param_dtype
+
+    is_shape = lambda x: isinstance(x, tuple) and all(isinstance(e, int) for e in x)
+    flat_shapes, treedef = jax.tree_util.tree_flatten(shapes, is_leaf=is_shape)
+    flat_log = treedef.flatten_up_to(logical)
+    flat_msh = treedef.flatten_up_to(m_sh)
+    params, moments = [], []
+    for shp, log, msh in zip(flat_shapes, flat_log, flat_msh):
+        pspec = _prune_spec(rules.spec(log), shp, mesh)
+        mspec = _prune_spec(msh.spec, shp, mesh)
+        params.append(jax.ShapeDtypeStruct(
+            shp, dt, sharding=NamedSharding(mesh, pspec)))
+        moments.append(jax.ShapeDtypeStruct(
+            shp, jnp.float32, sharding=NamedSharding(mesh, mspec)))
+    params = jax.tree_util.tree_unflatten(treedef, params)
+    moments = jax.tree_util.tree_unflatten(treedef, moments)
+    rep = NamedSharding(mesh, P())
+    opt = {"step": jax.ShapeDtypeStruct((), jnp.int32, sharding=rep),
+           "m": moments, "v": moments}
+    return {"params": params, "opt": opt}
+
+
+def batch_specs(cfg, suite, rules):
+    specs = input_specs(cfg, suite)
+    logical = batch_logical(cfg, suite)
+    gb_ok = suite.global_batch % _dp_size(rules) == 0
+
+    def one(s, l):
+        if not gb_ok:                      # tiny global batch: replicate
+            l = tuple(None for _ in l)
+        spec = _prune_spec(rules.spec(l), s.shape, rules.mesh)
+        return jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(rules.mesh, spec))
+
+    return jax.tree_util.tree_map(
+        one, specs, logical,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _dp_size(rules):
+    n = 1
+    for a in ("pod", "data"):
+        n *= rules.mesh.shape.get(a, 1)
+    return n
+
+
+def cache_specs(model, suite, rules):
+    """Abstract decode caches.
+
+    * When the global batch can't cover the DP axes (long_500k: batch 1), the
+      KV *sequence* axis is sharded instead (logical 'seq_kv').
+    * When kv_heads doesn't divide the model axis (GQA kv < 16), the KV cache
+      falls back to head-dim sharding ('model_in'): attention contracts over
+      head_dim, so GSPMD turns it into partial sums + a small score
+      all-reduce instead of replicating the cache.
+    """
+    cfg = model.cfg
+    b = suite.global_batch
+    mesh = rules.mesh
+    shapes = jax.eval_shape(lambda: model.init_caches(b, suite.seq_len))
+    logical = model.cache_logical()
+    shard_seq = b % _dp_size(rules) != 0
+    model_size = mesh.shape.get("model", 1)
+
+    def one(sds, log):
+        log = list(log) + [None] * (len(sds.shape) - len(log))
+        if shard_seq:
+            log = [None if l == "batch" else l for l in log]
+            if len(sds.shape) >= 3 and sds.shape[2] == suite.seq_len:
+                log[2] = "seq_kv"
+        # GQA fallback: kv head axis unshardable -> shard head_dim
+        for i, l in enumerate(log):
+            if l == "kv_heads" and sds.shape[i] % model_size != 0:
+                log[i] = None
+                if sds.shape[-1] % model_size == 0 and log[-1] is None:
+                    log[-1] = "model_in"
+        spec = _prune_spec(rules.spec(tuple(log)), sds.shape, mesh)
+        return jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(
+        one, shapes, logical,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def lower_cell(arch: str, suite_name: str, mesh_name: str):
+    """Returns (lowered, compiled, cfg, suite, chips)."""
+    cfg = get_config(arch)
+    suite = SUITES[suite_name]
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    rules = rules_for(mesh)
+    chips = hw.CHIPS_MULTI_POD if multi else hw.CHIPS_SINGLE_POD
+    model = build(cfg)
+
+    with mesh, use_rules(rules):
+        if suite.mode == "train":
+            trainer = Trainer(model, AdamWConfig(), mesh=mesh, rules=rules,
+                              dp_axes=("pod", "data") if multi else ("data",))
+            st = state_specs(model, trainer, rules)
+            bt = batch_specs(cfg, suite, rules)
+            step = trainer.make_train_step()
+            fn = jax.jit(lambda s, b: step(s, b, None),
+                         donate_argnums=(0,))
+            lowered = fn.lower(st, bt)
+        elif suite.mode == "prefill":
+            pt = _sds(model.param_shapes(), model.param_logical(),
+                      lambda _: cfg.param_dtype, rules)
+            bt = batch_specs(cfg, suite, rules)
+            fn = jax.jit(lambda p, b: model.prefill(p, b))
+            lowered = fn.lower(pt, bt)
+        else:                                   # decode
+            pt = _sds(model.param_shapes(), model.param_logical(),
+                      lambda _: cfg.param_dtype, rules)
+            bt = batch_specs(cfg, suite, rules)
+            ct = cache_specs(model, suite, rules)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            fn = jax.jit(lambda p, t, c, i: model.decode_step(p, t, c, i),
+                         donate_argnums=(2,))
+            lowered = fn.lower(pt, bt["token"], ct, pos)
+        compiled = lowered.compile()
+    return lowered, compiled, cfg, suite, chips
+
+
+def run_cell(arch: str, suite_name: str, mesh_name: str, *, force=False,
+             out_dir=REPORT_DIR) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    key = f"{arch}__{suite_name}__{mesh_name}"
+    path = os.path.join(out_dir, key + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    t0 = time.time()
+    try:
+        lowered, compiled, cfg, suite, chips = lower_cell(arch, suite_name,
+                                                          mesh_name)
+        cost = dict(compiled.cost_analysis())
+        try:
+            mem = compiled.memory_analysis()
+        except Exception:
+            mem = None
+        report = analyze(arch=arch, suite=suite, mesh_name=mesh_name,
+                         chips=chips, hlo_text=compiled.as_text(),
+                         cost=cost, mem=mem, cfg=cfg)
+        out = {"status": "ok", "cell": key, "seconds": time.time() - t0,
+               **report.to_dict(),
+               "memory_analysis": repr(mem), "xla_cost_keys": sorted(cost)[:8]}
+    except Exception as e:
+        out = {"status": "error", "cell": key, "seconds": time.time() - t0,
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    return out
+
+
+def all_cells(mesh_names):
+    out = []
+    for arch in list_configs():
+        cfg = get_config(arch)
+        for suite in cells(cfg):
+            for m in mesh_names:
+                out.append((arch, suite.name, m))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=REPORT_DIR)
+    args = ap.parse_args()
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    todo = (all_cells(meshes) if args.all
+            else [(args.arch, args.shape, m) for m in meshes])
+    n_ok = 0
+    for arch, shape, m in todo:
+        out = run_cell(arch, shape, m, force=args.force, out_dir=args.out)
+        ok = out["status"] == "ok"
+        n_ok += ok
+        msg = (f"bottleneck={out.get('bottleneck')} "
+               f"t=({out.get('t_compute', 0):.2e},{out.get('t_memory', 0):.2e},"
+               f"{out.get('t_collective', 0):.2e})s" if ok
+               else out.get("error", "?"))
+        print(f"[{'OK' if ok else 'FAIL'}] {arch} x {shape} x {m} "
+              f"({out['seconds']:.0f}s) {msg}", flush=True)
+    print(f"{n_ok}/{len(todo)} cells OK")
+    return 0 if n_ok == len(todo) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

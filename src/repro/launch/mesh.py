@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state (device counts are locked at first jax init, and tests /
+benches must see the real single device while the dry-run sees 512 host
+devices via its own XLA_FLAGS).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.parallel.sharding import AxisRules, DEFAULT_RULES, MULTIPOD_RULES
+
+__all__ = ["make_production_mesh", "rules_for"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) = (data, model) single pod; (2, 16, 16) = (pod, data, model)
+    for the 2-pod, 512-chip production target."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def rules_for(mesh) -> AxisRules:
+    import dataclasses
+    base = MULTIPOD_RULES if "pod" in mesh.shape else DEFAULT_RULES
+    return dataclasses.replace(base, mesh=mesh)

@@ -1,0 +1,111 @@
+"""End-to-end training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --smoke \
+      --steps 200 --ckpt-dir /tmp/run1
+
+Wires together: config -> model -> Trainer (sharded when a mesh is requested)
+-> deterministic data pipeline -> crash-safe restart loop (ft.py) ->
+spectral monitor (the paper's SVD engine) -> checkpoints.  ``--smoke`` uses
+the reduced config (CPU-runnable); otherwise the full assigned config
+(requires real accelerators or the 512-device dry-run environment).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, smoke_of
+from repro.models import build
+from repro.parallel.compression import CompressionConfig
+from repro.train import (AdamWConfig, DataConfig, StragglerMonitor, Trainer,
+                         batch_at, checkpoint)
+from repro.train.spectral import SpectralMonitor, SpectralMonitorConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--spectral-every", type=int, default=0,
+                    help="refresh spectral monitor every N steps (0=off)")
+    ap.add_argument("--compress-rank", type=int, default=0,
+                    help="PowerSGD gradient compression rank (0=off)")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_of(args.arch) if args.smoke else get_config(args.arch)
+    model = build(cfg)
+    opt = AdamWConfig(peak_lr=args.lr, warmup_steps=min(20, args.steps // 10 + 1),
+                      total_steps=args.steps,
+                      spectral_clip=2.0 if args.spectral_every else 0.0)
+    compression = (CompressionConfig(rank=args.compress_rank)
+                   if args.compress_rank else None)
+    trainer = Trainer(model, opt, accum=args.accum, compression=compression)
+    dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                    global_batch=args.batch, seed=17)
+    monitor = (SpectralMonitor(SpectralMonitorConfig(every=args.spectral_every,
+                                                     size=64, bw=16,
+                                                     backend="ref"))
+               if args.spectral_every else None)
+    straggler = StragglerMonitor(
+        on_straggler=lambda s, t, m: print(
+            f"[straggler] step {s}: {t:.2f}s vs median {m:.2f}s", flush=True))
+
+    with_sigma = monitor is not None
+    jstep = jax.jit(trainer.make_train_step()) if with_sigma else \
+        jax.jit(lambda s, b: trainer.make_train_step()(s, b, None))
+
+    # ---- resume or init ----------------------------------------------------
+    start = 0
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    if args.ckpt_dir:
+        last = checkpoint.latest_step(args.ckpt_dir)
+        if last is not None:
+            state = checkpoint.restore(args.ckpt_dir, last, state)
+            start = last
+            print(f"resumed from step {start}", flush=True)
+
+    t_start = time.time()
+    for step in range(start, args.steps):
+        t0 = time.monotonic()
+        batch = {k: jnp.asarray(v) for k, v in batch_at(dc, step).items()}
+        if monitor is not None:
+            monitor.maybe_refresh(step, state["params"])
+            state, metrics = jstep(state, batch, monitor.sigma_max_tree())
+        else:
+            state, metrics = jstep(state, batch)
+        straggler.record(step, time.monotonic() - t0)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            line = {"step": step,
+                    "loss": round(float(metrics["loss"]), 4),
+                    "grad_norm": round(float(metrics["grad_norm"]), 3),
+                    "lr": float(metrics["lr"])}
+            if monitor is not None:
+                sm = monitor.metrics()
+                if sm:
+                    k = sorted(sm)[0]
+                    line["sigma0"] = round(sm[k], 3)
+            print(json.dumps(line), flush=True)
+        if args.ckpt_dir and (step + 1) % args.save_every == 0:
+            checkpoint.save(args.ckpt_dir, step + 1, state)
+    if args.ckpt_dir:
+        checkpoint.save(args.ckpt_dir, args.steps, state)
+    dt = time.time() - t_start
+    print(f"done: {args.steps - start} steps in {dt:.1f}s "
+          f"({(args.steps - start) / max(dt, 1e-9):.2f} it/s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro.models — pure-JAX module substrate + assigned architectures."""
+from repro.models.zoo import Model, build, input_specs, batch_logical

@@ -1,0 +1,148 @@
+"""GQA attention with RoPE — train/prefill (full-sequence) and decode
+(single token against a KV cache) paths.  Head dims are sharded on the
+"model" axis (Megatron-style); softmax in fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as nn
+from repro.models.modules import param
+
+__all__ = ["attn_params", "rope", "attention", "attention_decode", "init_kv_cache"]
+
+
+def attn_params(cfg, dtype) -> dict:
+    d, hd, nh, nkv = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv
+    p = {
+        "wq": param((d, nh * hd), dtype, (None, "heads")),
+        "wk": param((d, nkv * hd), dtype, (None, "kv_heads")),
+        "wv": param((d, nkv * hd), dtype, (None, "kv_heads")),
+        "wo": param((nh * hd, d), dtype, ("heads", None)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = param((nh * hd,), dtype, ("heads",), init="zeros")
+        p["bk"] = param((nkv * hd,), dtype, ("kv_heads",), init="zeros")
+        p["bv"] = param((nkv * hd,), dtype, ("kv_heads",), init="zeros")
+    return p
+
+
+def rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); pos: (..., S) absolute positions."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[..., :, None, None].astype(jnp.float32) * freqs  # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _qkv(x, p, cfg):
+    b, s, _ = x.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv
+    q = nn.dense(x, p["wq"], p.get("bq")).reshape(b, s, nh, hd)
+    k = nn.dense(x, p["wk"], p.get("bk")).reshape(b, s, nkv, hd)
+    v = nn.dense(x, p["wv"], p.get("bv")).reshape(b, s, nkv, hd)
+    return q, k, v
+
+
+def _gqa_scores(q, k, cfg):
+    """q: (b,s,nh,hd), k: (b,t,nkv,hd) -> (b, nkv, group, s, t)."""
+    b, s, nh, hd = q.shape
+    nkv = cfg.n_kv
+    q = q.reshape(b, s, nkv, nh // nkv, hd)
+    return jnp.einsum("bsngh,btnh->bngst", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def attention(x: jax.Array, p: dict, cfg, *, pos0: int = 0) -> jax.Array:
+    """Full-sequence causal attention (train / prefill).
+
+    GQA is evaluated with the KV heads *explicitly repeated* to the query head
+    count so every attention tensor is 4D with the same head axis, sharded on
+    "model".  The 5D grouped-einsum formulation made GSPMD fall back to
+    "involuntary full rematerialization" (replicating (b,s,kv,hd) tensors per
+    layer) because kv=8 groups cannot split a 16-way model axis; repeating
+    first turns the reshard into a cheap neighbor exchange (§Perf iteration
+    A1 in EXPERIMENTS.md)."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    g = cfg.n_heads // cfg.n_kv
+    q, k, v = _qkv(x, p, cfg)
+    pos = pos0 + jnp.arange(s)[None, :]
+    q, k = rope(q, pos, cfg.rope_theta), rope(k, pos, cfg.rope_theta)
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    q = nn.act_shard(q, ("batch", None, "heads", None))
+    k = nn.act_shard(k, ("batch", None, "heads", None))
+    v = nn.act_shard(v, ("batch", None, "heads", None))
+    scores = jnp.einsum("bsnh,btnh->bnst", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bnst,btnh->bsnh", w, v)
+    o = o.reshape(b, s, cfg.n_heads * hd)
+    o = nn.act_shard(o, ("batch", None, "heads"))
+    return nn.dense(o, p["wo"])
+
+
+def init_kv_cache(cfg, batch: int, max_seq: int, dtype) -> dict:
+    hd, nkv = cfg.head_dim, cfg.n_kv
+    shape = (cfg.n_layers, batch, max_seq, nkv, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+KV_CACHE_LOGICAL = {"k": (None, "batch", None, "kv_heads", None),
+                    "v": (None, "batch", None, "kv_heads", None)}
+
+
+def attention_decode(x: jax.Array, p: dict, cfg, kv_layer: dict,
+                     pos: jax.Array) -> tuple[jax.Array, dict]:
+    """One-token decode: x (b, 1, d), kv_layer {'k','v'}: (b, S, nkv, hd),
+    pos: scalar or per-sequence (b,) positions (continuous batching).
+    Returns (out (b,1,d), updated kv)."""
+    b, one, _ = x.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv
+    pos = jnp.asarray(pos, jnp.int32)
+    scalar_pos = pos.ndim == 0                 # pod decode: one shared position
+    posv = jnp.broadcast_to(pos, (b,))[:, None]
+    q, k_new, v_new = _qkv(x, p, cfg)
+    q = rope(q, posv, cfg.rope_theta)
+    k_new = rope(k_new, posv, cfg.rope_theta)
+    if scalar_pos:
+        # dynamic_update_slice keeps the sharded cache update local (the
+        # batched scatter below makes GSPMD reshard — 2x decode collectives)
+        kc = jax.lax.dynamic_update_slice_in_dim(kv_layer["k"], k_new, pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(kv_layer["v"], v_new, pos, axis=1)
+    else:                                      # per-slot positions (engine)
+        bidx = jnp.arange(b)
+        kc = kv_layer["k"].at[bidx, pos].set(k_new[:, 0])
+        vc = kv_layer["v"].at[bidx, pos].set(v_new[:, 0])
+    s_max = kc.shape[1]
+    # GQA decode with kv_heads < model axis: the cache lives head_dim-sharded
+    # (launch/dryrun.py cache_specs fallback); matching q's layout makes the
+    # score contraction local with one small (b,n,g,1,t) all-reduce instead
+    # of an involuntary cache reshard (§Perf A5).  Only when the kv-head axis
+    # cannot divide the model axis — otherwise the cache is kv-sharded and
+    # this constraint would fight it.
+    from repro.parallel.sharding import current_rules
+    _r = current_rules()
+    _msize = _r.mesh.shape.get("model", 1) if (_r and _r.mesh) else 1
+    if _msize > 1 and cfg.n_kv % _msize != 0:
+        q = nn.act_shard(q, ("batch", None, None, "model_in"))
+    scores = _gqa_scores(q, kc, cfg) / jnp.sqrt(hd).astype(jnp.float32)
+    valid = jnp.arange(s_max)[None, :] <= jnp.broadcast_to(pos, (b,))[:, None]
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bngst,btnh->bsngh", w, vc).reshape(b, 1, nh * hd)
+    return nn.dense(o, p["wo"]), {"k": kc, "v": vc}

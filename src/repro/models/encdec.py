@@ -1,0 +1,201 @@
+"""Encoder-decoder assembly (whisper-medium backbone).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings (b, enc_seq, d).  Encoder = bidirectional MHA
+blocks; decoder = causal self-attention + cross-attention blocks.  RoPE is
+used in place of whisper's learned positional embeddings (noted in DESIGN.md —
+the backbone dims are what the assignment fixes).  Decode caches both the
+self-attention KV and the per-layer cross KV (computed once at prefill).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import modules as nn
+from repro.models.modules import param
+from repro.models.transformer import lm_loss  # noqa: F401  (re-export)
+
+__all__ = ["encdec_param_specs", "encode", "encdec_forward",
+           "encdec_decode_step", "init_encdec_caches", "encdec_cache_logical",
+           "cross_kv"]
+
+
+def _mlp_p(d, f, dtype):
+    return {"wi": param((d, f), dtype, (None, "dff")),
+            "bi": param((f,), dtype, ("dff",), init="zeros"),
+            "wo": param((f, d), dtype, ("dff", None)),
+            "bo": param((d,), dtype, (None,), init="zeros")}
+
+
+def _mlp(x, p):
+    return nn.dense(jax.nn.gelu(nn.dense(x, p["wi"], p["bi"])), p["wo"], p["bo"])
+
+
+def _xattn_p(cfg, dtype):
+    d, hd, nh, nkv = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv
+    return {"wq": param((d, nh * hd), dtype, (None, "heads")),
+            "wk": param((d, nkv * hd), dtype, (None, "kv_heads")),
+            "wv": param((d, nkv * hd), dtype, (None, "kv_heads")),
+            "wo": param((nh * hd, d), dtype, ("heads", None))}
+
+
+def _enc_layer_p(cfg, dtype):
+    d = cfg.d_model
+    return {"ln1": nn.rmsnorm_p(d, dtype), "attn": attn.attn_params(cfg, dtype),
+            "ln2": nn.rmsnorm_p(d, dtype), "mlp": _mlp_p(d, cfg.d_ff, dtype)}
+
+
+def _dec_layer_p(cfg, dtype):
+    d = cfg.d_model
+    return {"ln1": nn.rmsnorm_p(d, dtype), "attn": attn.attn_params(cfg, dtype),
+            "lnx": nn.rmsnorm_p(d, dtype), "xattn": _xattn_p(cfg, dtype),
+            "ln2": nn.rmsnorm_p(d, dtype), "mlp": _mlp_p(d, cfg.d_ff, dtype)}
+
+
+def _stack(tree, L):
+    return jax.tree_util.tree_map(
+        lambda s: param((L,) + s.shape, s.dtype, (None,) + s.logical,
+                        init=s.init, scale=s.scale),
+        tree, is_leaf=lambda x: isinstance(x, nn.ParamSpec))
+
+
+def encdec_param_specs(cfg) -> dict:
+    dtype = cfg.param_dtype
+    d = cfg.d_model
+    return {
+        "embed": nn.embedding_p(cfg.padded_vocab, d, dtype),
+        "enc_layers": _stack(_enc_layer_p(cfg, dtype), cfg.n_enc_layers),
+        "enc_norm": nn.rmsnorm_p(d, dtype),
+        "dec_layers": _stack(_dec_layer_p(cfg, dtype), cfg.n_layers),
+        "final_norm": nn.rmsnorm_p(d, dtype),
+        "lm_head": param((d, cfg.padded_vocab), dtype, (None, "vocab")),
+    }
+
+
+def _bidir_attention(x, p, cfg):
+    """Encoder self-attention: full (non-causal) with RoPE."""
+    b, s, _ = x.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv
+    q = nn.dense(x, p["wq"], p.get("bq")).reshape(b, s, nh, hd)
+    k = nn.dense(x, p["wk"], p.get("bk")).reshape(b, s, nkv, hd)
+    v = nn.dense(x, p["wv"], p.get("bv")).reshape(b, s, nkv, hd)
+    pos = jnp.arange(s)[None, :]
+    q, k = attn.rope(q, pos, cfg.rope_theta), attn.rope(k, pos, cfg.rope_theta)
+    scores = attn._gqa_scores(q, k, cfg) / jnp.sqrt(hd).astype(jnp.float32)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bngst,btnh->bsngh", w, v).reshape(b, s, nh * hd)
+    return nn.dense(o, p["wo"])
+
+
+def cross_kv(enc_out, p, cfg):
+    b, t, _ = enc_out.shape
+    hd, nkv = cfg.head_dim, cfg.n_kv
+    k = nn.dense(enc_out, p["wk"]).reshape(b, t, nkv, hd)
+    v = nn.dense(enc_out, p["wv"]).reshape(b, t, nkv, hd)
+    return k, v
+
+
+def _cross_attention(x, k, v, p, cfg):
+    """q from decoder x, kv precomputed from encoder output (no RoPE)."""
+    b, s, _ = x.shape
+    hd, nh = cfg.head_dim, cfg.n_heads
+    q = nn.dense(x, p["wq"]).reshape(b, s, nh, hd)
+    scores = attn._gqa_scores(q, k, cfg) / jnp.sqrt(hd).astype(jnp.float32)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bngst,btnh->bsngh", w, v).reshape(b, s, nh * hd)
+    return nn.dense(o, p["wo"])
+
+
+def encode(params, cfg, frames):
+    """frames: (b, enc_seq, d) precomputed embeddings (stub frontend)."""
+    x = nn.act_shard(frames.astype(cfg.param_dtype), ("batch", None, None))
+
+    def body(carry, lp):
+        carry = nn.act_shard(carry, ("batch", "seq_sp", None))
+        h = carry + _bidir_attention(nn.rmsnorm(carry, lp["ln1"], cfg.norm_eps),
+                                     lp["attn"], cfg)
+        h = h + _mlp(nn.rmsnorm(h, lp["ln2"], cfg.norm_eps), lp["mlp"])
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    return nn.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def encdec_forward(params, cfg, tokens, frames):
+    """Teacher-forced forward: (logits, aux)."""
+    enc_out = encode(params, cfg, frames)
+    x = params["embed"].astype(cfg.param_dtype)[tokens]
+    x = nn.act_shard(x, ("batch", None, None))
+
+    def body(carry, lp):
+        carry = nn.act_shard(carry, ("batch", "seq_sp", None))
+        h = carry + attn.attention(nn.rmsnorm(carry, lp["ln1"], cfg.norm_eps),
+                                   lp["attn"], cfg)
+        k, v = cross_kv(enc_out, lp["xattn"], cfg)
+        h = h + _cross_attention(nn.rmsnorm(h, lp["lnx"], cfg.norm_eps),
+                                 k, v, lp["xattn"], cfg)
+        h = h + _mlp(nn.rmsnorm(h, lp["ln2"], cfg.norm_eps), lp["mlp"])
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_layers"])
+    x = nn.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    aux = {"aux_loss": jnp.zeros((), jnp.float32),
+           "router_zloss": jnp.zeros((), jnp.float32)}
+    return nn.act_shard(logits, ("batch", None, "vocab")), aux
+
+
+def init_encdec_caches(cfg, batch: int, max_seq: int, dtype) -> dict:
+    hd, nkv, L = cfg.head_dim, cfg.n_kv, cfg.n_layers
+    return {
+        "kv": {"k": jnp.zeros((L, batch, max_seq, nkv, hd), dtype),
+               "v": jnp.zeros((L, batch, max_seq, nkv, hd), dtype)},
+        "xkv": {"k": jnp.zeros((L, batch, cfg.enc_seq, nkv, hd), dtype),
+                "v": jnp.zeros((L, batch, cfg.enc_seq, nkv, hd), dtype)},
+    }
+
+
+def encdec_cache_logical(cfg) -> dict:
+    kv = (None, "batch", None, "kv_heads", None)
+    return {"kv": {"k": kv, "v": kv}, "xkv": {"k": kv, "v": kv}}
+
+
+def fill_cross_cache(params, cfg, frames, caches):
+    """Prefill step for decode: compute enc output and per-layer cross KV."""
+    enc_out = encode(params, cfg, frames)
+
+    def body(_, lp):
+        k, v = cross_kv(enc_out, lp["xattn"], cfg)
+        return None, {"k": k, "v": v}
+
+    _, xkv = jax.lax.scan(body, None, params["dec_layers"])
+    return dict(caches, xkv=xkv)
+
+
+def encdec_decode_step(params, cfg, token, caches, pos):
+    """One decoder token against self KV cache + static cross KV."""
+    x = params["embed"].astype(cfg.param_dtype)[token]
+    x = nn.act_shard(x, ("batch", None, None))
+
+    def body(carry, xs):
+        lp, kv, xkv = xs
+        h, new_kv = attn.attention_decode(
+            nn.rmsnorm(carry, lp["ln1"], cfg.norm_eps), lp["attn"], cfg, kv, pos)
+        h = carry + h
+        h = h + _cross_attention(nn.rmsnorm(h, lp["lnx"], cfg.norm_eps),
+                                 xkv["k"], xkv["v"], lp["xattn"], cfg)
+        h = h + _mlp(nn.rmsnorm(h, lp["ln2"], cfg.norm_eps), lp["mlp"])
+        return h, new_kv
+
+    x, new_kv = jax.lax.scan(body, x, (params["dec_layers"], caches["kv"],
+                                       caches["xkv"]))
+    x = nn.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return logits, dict(caches, kv=new_kv)

@@ -1,0 +1,127 @@
+"""Minimal functional module substrate (params are plain pytrees).
+
+Every parameter is created through ``param(...)`` which records its *logical
+sharding axes* alongside shape/dtype; ``init_tree`` materializes values while
+``logical_tree`` extracts the matching sharding annotation pytree (used by the
+launchers to build in_shardings for pjit).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import act_shard
+
+__all__ = [
+    "ParamSpec", "param", "init_tree", "logical_tree", "shape_tree",
+    "dense", "rmsnorm_p", "rmsnorm", "layernorm_p", "layernorm",
+    "embedding_p", "swiglu_p", "swiglu", "act_shard",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    dtype: object
+    logical: tuple[str | None, ...]
+    init: str = "normal"              # normal | zeros | ones | scaled
+    scale: float = 1.0
+
+    def materialize(self, key) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        fan_in = self.shape[0] if len(self.shape) > 1 else max(self.shape[0], 1)
+        if self.init == "scaled":
+            std = self.scale / math.sqrt(fan_in)
+        else:
+            std = 0.02
+        return (jax.random.normal(key, self.shape, jnp.float32) * std).astype(self.dtype)
+
+
+def param(shape, dtype, logical, init="scaled", scale=1.0) -> ParamSpec:
+    assert len(logical) == len(shape), (shape, logical)
+    return ParamSpec(tuple(shape), dtype, tuple(logical), init, scale)
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def init_tree(spec_tree, key) -> dict:
+    """Materialize a pytree of ParamSpecs into arrays (stable key folding)."""
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=_is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    vals = [s.materialize(k) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def logical_tree(spec_tree):
+    return jax.tree_util.tree_map(lambda s: s.logical, spec_tree, is_leaf=_is_spec)
+
+
+def shape_tree(spec_tree):
+    return jax.tree_util.tree_map(lambda s: s.shape, spec_tree, is_leaf=_is_spec)
+
+
+# ---------------------------------------------------------------------------
+# primitive layers (functional)
+# ---------------------------------------------------------------------------
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    """x @ w, output in x.dtype.
+
+    No explicit f32 upcast: MXU/dot hardware accumulates bf16 operands in f32
+    internally, and an ``einsum(..., preferred_element_type=f32).astype(bf16)``
+    chain makes every backward cotangent f32 — doubling all activation
+    collectives and HBM traffic (§Perf iteration A2 in EXPERIMENTS.md)."""
+    out = jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
+    if b is not None:
+        out = out + b.astype(x.dtype)
+    return out
+
+
+def rmsnorm_p(d: int, dtype) -> ParamSpec:
+    return param((d,), dtype, (None,), init="ones")
+
+
+def rmsnorm(x: jax.Array, g: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * g.astype(x.dtype)
+
+
+def layernorm_p(d: int, dtype) -> dict:
+    return {"g": param((d,), dtype, (None,), init="ones"),
+            "b": param((d,), dtype, (None,), init="zeros")}
+
+
+def layernorm(x: jax.Array, p: dict, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * p["g"].astype(x.dtype) + p["b"].astype(x.dtype)
+
+
+def embedding_p(vocab: int, d: int, dtype) -> ParamSpec:
+    return param((vocab, d), dtype, ("vocab", None), init="normal")
+
+
+def swiglu_p(d: int, f: int, dtype) -> dict:
+    return {
+        "wi": param((d, 2 * f), dtype, (None, "dff")),       # gate+up fused
+        "wo": param((f, d), dtype, ("dff", None)),
+    }
+
+
+def swiglu(x: jax.Array, p: dict) -> jax.Array:
+    gu = dense(x, p["wi"])
+    g, u = jnp.split(gu, 2, axis=-1)
+    return dense(jax.nn.silu(g) * u, p["wo"])

@@ -1,0 +1,111 @@
+"""Mixture-of-Experts FFN.
+
+Routing: top-k softmax.  Dispatch: *sort-based capacity bucketing per example*
+(argsort tokens by expert, take the first ``cap`` per expert) — memory scales
+as ``s * top_k * d`` (vs the (tokens, E, cap) blow-up of one-hot dispatch),
+shapes stay static, and the expert dimension shards on the "model" axis (EP):
+expert GEMMs are local to the expert shard while the per-example gather /
+scatter stays local to the data shard; GSPMD inserts the all-to-all between
+them.  Optional shared experts (DeepSeekMoE) + Switch aux loss + router z-loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as nn
+from repro.models.modules import param
+
+__all__ = ["moe_params", "moe_ffn"]
+
+
+def moe_params(cfg, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": param((d, e), jnp.float32, (None, "expert"), init="scaled"),
+        "wi": param((e, d, 2 * f), dtype, ("expert", None, "dff")),
+        "wo": param((e, f, d), dtype, ("expert", "dff", None)),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = nn.swiglu_p(d, f * cfg.n_shared_experts, dtype)
+    return p
+
+
+def _capacity(s: int, cfg) -> int:
+    cap = int(cfg.top_k * s * cfg.capacity_factor / cfg.n_experts) + 1
+    return min(max(cap, min(4, s * cfg.top_k)), s)
+
+
+def _route_one(xf, gate_idx, gate_vals, *, e: int, cap: int):
+    """Per-example dispatch indices.  xf: (s, d); gate_*: (s, k).
+
+    Returns (tok (e,cap) token ids, w (e,cap) combine weights, valid (e,cap)).
+    Stable argsort by expert id groups slots; entries past an expert's
+    capacity are dropped (first-come policy, as GShard/Switch).
+    """
+    s, k = gate_idx.shape
+    flat_e = gate_idx.reshape(-1)                        # (s*k,), token-major
+    flat_w = gate_vals.reshape(-1)
+    flat_tok = jnp.arange(s * k, dtype=jnp.int32) // k
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    sorted_tok = flat_tok[order]
+    sorted_w = flat_w[order]
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    slot = starts[:, None] + jnp.arange(cap, dtype=jnp.int32)[None]   # (e, cap)
+    valid = jnp.arange(cap)[None] < counts[:, None]
+    slot = jnp.clip(slot, 0, s * k - 1)
+    # safety: slots past the end of an expert's range belong to other experts
+    valid &= sorted_e[slot] == jnp.arange(e, dtype=flat_e.dtype)[:, None]
+    tok = sorted_tok[slot]
+    w = jnp.where(valid, sorted_w[slot], 0.0)
+    return tok, w, valid
+
+
+def moe_ffn(x: jax.Array, p: dict, cfg) -> tuple[jax.Array, dict]:
+    """x: (b, s, d) -> (out, {'aux_loss', 'router_zloss'})."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(s, cfg)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                 # (b, s, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    tok, w, valid = jax.vmap(
+        lambda xi, gi, gv: _route_one(xi, gi, gv, e=e, cap=cap))(x, gate_idx,
+                                                                 gate_vals)
+    # gather: (b, e, cap, d), zeroed beyond capacity
+    xe = jnp.take_along_axis(x[:, None], tok[..., None].astype(jnp.int32),
+                             axis=2)
+    xe = jnp.where(valid[..., None], xe, 0)
+    xe = nn.act_shard(xe, ("batch", "expert", None, None))
+    gu = jnp.einsum("becd,edf->becf", xe, p["wi"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    g, u = jnp.split(gu, 2, axis=-1)
+    ye = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u, p["wo"],
+                    preferred_element_type=jnp.float32)
+    ye = ye * w[..., None]                                        # combine wts
+    # scatter-add back to tokens (duplicates accumulate)
+    def _combine_one(ye_i, tok_i):
+        return jnp.zeros((s, d), jnp.float32).at[tok_i.reshape(-1)].add(
+            ye_i.reshape(-1, d))
+    out = jax.vmap(_combine_one)(ye, tok).astype(x.dtype)
+    out = nn.act_shard(out, ("batch", None, None))
+
+    if cfg.n_shared_experts:
+        out = out + nn.swiglu(x, p["shared"])
+
+    # Switch aux loss + router z-loss
+    me = probs.mean((0, 1))                                       # (e,)
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)       # (b,s,k,e)
+    ce = onehot.sum(2).mean((0, 1))
+    aux = cfg.aux_loss_coef * e * jnp.sum(me * ce)
+    zloss = cfg.router_zloss * jnp.mean(
+        jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    return out, {"aux_loss": aux, "router_zloss": zloss}

@@ -1,0 +1,159 @@
+"""RWKV6 ("Finch") block: data-dependent-decay linear recurrence (time-mix)
+plus squared-ReLU channel-mix.  Attention-free — O(1) state per token, so the
+``long_500k`` decode shape runs on this arch (DESIGN.md §5).
+
+Time-mix follows the Finch formulation:
+    y_t = r_t . (S_{t-1} + u (x) k_t v_t),   S_t = diag(w_t) S_{t-1} + k_t v_t
+with w_t = exp(-exp(w0 + lora(x_mix))) per channel.  The sequence path reuses
+``chunked_decay_scan`` via the shift trick (q.S_{t-1} == inclusive scan over
+right-shifted (k, v, w)); decode is a single ``decay_step``.
+Simplifications vs the reference implementation are documented in DESIGN.md
+(static per-projection token-shift lerps instead of the per-step lora mix).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as nn
+from repro.models.modules import param
+from repro.models.ssm import chunked_decay_scan
+
+__all__ = ["rwkv_params", "rwkv_time_mix", "rwkv_channel_mix",
+           "rwkv_time_mix_decode", "init_rwkv_cache", "RWKV_CACHE_LOGICAL"]
+
+_LORA = 64
+
+
+def rwkv_params(cfg, dtype) -> dict:
+    d = cfg.d_model
+    f = cfg.d_ff
+    return {
+        "tm": {
+            "mu": param((5, d), dtype, (None, None), init="zeros"),  # r,k,v,w,g
+            "wr": param((d, d), dtype, (None, "heads")),
+            "wk": param((d, d), dtype, (None, "heads")),
+            "wv": param((d, d), dtype, (None, "heads")),
+            "wg": param((d, d), dtype, (None, "heads")),
+            "w0": param((d,), jnp.float32, (None,), init="zeros"),
+            "w_a": param((d, _LORA), dtype, (None, None)),
+            "w_b": param((_LORA, d), dtype, (None, None), init="zeros"),
+            "u": param((d,), jnp.float32, (None,), init="zeros"),
+            "ln_g": param((d,), dtype, (None,), init="ones"),
+            "wo": param((d, d), dtype, ("heads", None)),
+        },
+        "cm": {
+            "mu": param((2, d), dtype, (None, None), init="zeros"),
+            "wk": param((d, f), dtype, (None, "dff")),
+            "wv": param((f, d), dtype, ("dff", None)),
+            "wr": param((d, d), dtype, (None, None)),
+        },
+    }
+
+
+def _shift(x):
+    """Right-shift along seq axis with zero pad: x_{t-1}."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def _heads(x, hsz):
+    b, t, d = x.shape
+    return x.reshape(b, t, d // hsz, hsz)
+
+
+def _decay(xw, p):
+    lora = jnp.tanh(nn.dense(xw, p["w_a"])) @ p["w_b"].astype(xw.dtype)
+    return -jnp.exp(jnp.clip(p["w0"] + lora.astype(jnp.float32), -8, 4))
+
+
+def rwkv_time_mix(x, p, cfg, *, chunk: int = 128):
+    """x: (b, t, d) -> (b, t, d)."""
+    hsz = cfg.rwkv_head
+    xp = _shift(x)
+    mu = p["mu"]
+    xr, xk, xv, xw, xg = (_lerp(x, xp, mu[i]) for i in range(5))
+    r = _heads(nn.dense(xr, p["wr"]), hsz)
+    k = _heads(nn.dense(xk, p["wk"]), hsz)
+    v = _heads(nn.dense(xv, p["wv"]), hsz)
+    g = nn.dense(xg, p["wg"])
+    log_w = _heads(_decay(xw, p), hsz)                      # (b,t,h,hsz) <= 0
+
+    # shift trick: q . S_{t-1} == inclusive scan over shifted (k, v, w)
+    ks, vs, ws = _shift(k.reshape(*k.shape[:2], -1)), _shift(
+        v.reshape(*v.shape[:2], -1)), _shift(log_w.reshape(*log_w.shape[:2], -1))
+    y, _ = chunked_decay_scan(r, _heads(ks, hsz), _heads(vs, hsz),
+                              _heads(ws, hsz), chunk=chunk)
+    u = p["u"].reshape(1, 1, -1, hsz)
+    bonus = jnp.sum(r.astype(jnp.float32) * u * k.astype(jnp.float32), -1,
+                    keepdims=True) * v.astype(jnp.float32)
+    y = y.astype(jnp.float32) + bonus
+    y = y.reshape(x.shape)
+    # per-head group norm
+    yh = y.reshape(*x.shape[:2], -1, hsz)
+    yh = (yh - yh.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        yh.var(-1, keepdims=True) + 1e-5)
+    y = yh.reshape(x.shape).astype(x.dtype) * p["ln_g"].astype(x.dtype)
+    return nn.dense(y * jax.nn.silu(g), p["wo"])
+
+
+def rwkv_channel_mix(x, p, cfg):
+    xp = _shift(x)
+    xk = _lerp(x, xp, p["mu"][0])
+    xr = _lerp(x, xp, p["mu"][1])
+    k = jnp.square(jax.nn.relu(nn.dense(xk, p["wk"])))
+    return jax.nn.sigmoid(nn.dense(xr, p["wr"])) * nn.dense(k, p["wv"])
+
+
+def init_rwkv_cache(cfg, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    hsz = cfg.rwkv_head
+    h = d // hsz
+    L = cfg.n_layers
+    return {
+        "x_tm": jnp.zeros((L, batch, d), dtype),       # token-shift (time mix)
+        "x_cm": jnp.zeros((L, batch, d), dtype),       # token-shift (chan mix)
+        "state": jnp.zeros((L, batch, h, hsz, hsz), jnp.float32),
+    }
+
+
+RWKV_CACHE_LOGICAL = {"x_tm": (None, "batch", None),
+                      "x_cm": (None, "batch", None),
+                      "state": (None, "batch", "heads", None, None)}
+
+
+def rwkv_time_mix_decode(x, p, cfg, x_prev, state):
+    """One token: x (b,1,d); x_prev (b,d); state (b,h,hsz,hsz)."""
+    hsz = cfg.rwkv_head
+    xp = x_prev[:, None]
+    mu = p["mu"]
+    xr, xk, xv, xw, xg = (_lerp(x, xp, mu[i]) for i in range(5))
+    r = _heads(nn.dense(xr, p["wr"]), hsz)[:, 0]            # (b,h,hsz)
+    k = _heads(nn.dense(xk, p["wk"]), hsz)[:, 0]
+    v = _heads(nn.dense(xv, p["wv"]), hsz)[:, 0]
+    g = nn.dense(xg, p["wg"])
+    log_w = _heads(_decay(xw, p), hsz)[:, 0]
+    u = p["u"].reshape(1, -1, hsz)
+    rf, kf, vf = (z.astype(jnp.float32) for z in (r, k, v))
+    y = jnp.einsum("bhk,bhkv->bhv", rf, state) + jnp.sum(
+        rf * u * kf, -1, keepdims=True) * vf
+    state = state * jnp.exp(log_w.astype(jnp.float32))[..., None] + \
+        jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    y = (y - y.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        y.var(-1, keepdims=True) + 1e-5)
+    y = y.reshape(x.shape[0], 1, -1).astype(x.dtype) * p["ln_g"].astype(x.dtype)
+    out = nn.dense(y * jax.nn.silu(g), p["wo"])
+    return out, x[:, 0], state
+
+
+def rwkv_channel_mix_decode(x, p, cfg, x_prev):
+    xp = x_prev[:, None]
+    xk = _lerp(x, xp, p["mu"][0])
+    xr = _lerp(x, xp, p["mu"][1])
+    k = jnp.square(jax.nn.relu(nn.dense(xk, p["wk"])))
+    out = jax.nn.sigmoid(nn.dense(xr, p["wr"])) * nn.dense(k, p["wv"])
+    return out, x[:, 0]

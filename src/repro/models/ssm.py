@@ -1,0 +1,213 @@
+"""Selective state-space (Mamba) block + shared chunked decay-scan machinery.
+
+Two evaluators of the data-dependent-decay linear recurrence
+``S_t = diag(a_t) S_{t-1} + k_t v_t^T ; y_t = S_t q_t``:
+
+* ``chunked_decay_scan`` — multi-head (dk, dv) form used by RWKV6: intra-chunk
+  quadratic form + inter-chunk state via ``lax.scan`` (O(T) memory,
+  MXU-friendly (chunk x chunk) tiles).
+* Mamba's per-channel form (h = d_inner, dk = ssm_state, dv = 1) expands the
+  (t, d_inner, n) tensors *inside* the chunk loop — the full-sequence
+  residency is only (b, t, d_inner), the TPU analogue of the fused selective
+  scan kernel's memory behaviour.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as nn
+from repro.models.modules import param
+
+__all__ = ["chunked_decay_scan", "decay_step", "mamba_params", "mamba",
+           "mamba_decode", "init_mamba_cache", "MAMBA_CACHE_LOGICAL"]
+
+
+def chunked_decay_scan(q, k, v, log_a, *, chunk: int = 128, state0=None):
+    """Multi-head decay recurrence.  q, k: (b,t,h,dk); v: (b,t,h,dv);
+    log_a: (b,t,h,dk) (<= 0).  Returns (y (b,t,h,dv), state (b,h,dk,dv))."""
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    pad = (-t) % chunk
+    if pad:
+        q, k, v, log_a = (jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * 2)
+                          for x in (q, k, v, log_a))
+    tc = q.shape[1] // chunk
+    qc, kc, vc, lac = (x.reshape(b, tc, chunk, h, x.shape[-1]).transpose(1, 0, 2, 3, 4)
+                       for x in (q, k, v, log_a))
+    if state0 is None:
+        state0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def one_chunk(s_in, xs):
+        qi, ki, vi, lai = xs                                  # (b,chunk,h,d*)
+        lai = lai.astype(jnp.float32)
+        acc = jnp.cumsum(lai, axis=1)                         # incl. self
+        total = acc[:, -1:]
+        q_s = qi.astype(jnp.float32) * jnp.exp(acc)
+        k_tail = ki.astype(jnp.float32) * jnp.exp(total - acc)
+        y_state = jnp.einsum("bchk,bhkv->bchv", q_s, s_in)
+        k_r = ki.astype(jnp.float32) * jnp.exp(-acc)
+        scores = jnp.einsum("bchk,bdhk->bhcd", q_s, k_r)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        scores = jnp.where(causal[None, None], scores, 0.0)
+        y_intra = jnp.einsum("bhcd,bdhv->bchv", scores, vi.astype(jnp.float32))
+        s_out = s_in * jnp.exp(total).squeeze(1)[..., None] + jnp.einsum(
+            "bchk,bchv->bhkv", k_tail, vi.astype(jnp.float32))
+        return s_out, (y_state + y_intra).astype(v.dtype)
+
+    state, ys = jax.lax.scan(one_chunk, state0, (qc, kc, vc, lac))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, tc * chunk, h, dv)
+    return y[:, :t], state
+
+
+def decay_step(q, k, v, log_a, state):
+    """Single-token recurrence step (decode). q,k,log_a: (b,h,dk); v: (b,h,dv);
+    state: (b,h,dk,dv)."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None]
+    state = state * a + jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32),
+                                   v.astype(jnp.float32))
+    y = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), state)
+    return y.astype(v.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM) block — the SSM path of hymba
+# ---------------------------------------------------------------------------
+
+def mamba_params(cfg, dtype) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    return {
+        "in_proj": param((d, 2 * di), dtype, (None, "dff")),
+        "conv_w": param((cfg.ssm_conv, di), dtype, (None, "dff")),
+        "conv_b": param((di,), dtype, ("dff",), init="zeros"),
+        "w_b": param((di, n), dtype, ("dff", None)),      # x -> B (input gate)
+        "w_c": param((di, n), dtype, ("dff", None)),      # x -> C (output gate)
+        "w_dt": param((di, 1), dtype, ("dff", None)),
+        "dt_bias": param((di,), jnp.float32, ("dff",), init="zeros"),
+        "a_log": param((di, n), jnp.float32, ("dff", None), init="ones"),
+        "d_skip": param((di,), jnp.float32, ("dff",), init="ones"),
+        "out_proj": param((di, d), dtype, ("dff", None)),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: (b, t, c); w: (k, c) depthwise causal conv; state: (b, k-1, c)."""
+    kw = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (kw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(kw))
+    new_state = xp[:, -(kw - 1):] if kw > 1 else jnp.zeros_like(x[:, :0])
+    return out + b.astype(x.dtype), new_state
+
+
+def _dt_b_c(xc, p):
+    """(b, *, di) -> dt (b,*,di), bmat/cmat (b,*,n) — cheap projections; the
+    (di, n) expansion is deferred into the chunk loop."""
+    bmat = nn.dense(xc, p["w_b"]).astype(jnp.float32)
+    cmat = nn.dense(xc, p["w_c"]).astype(jnp.float32)
+    # scalar dt per position, broadcast to per-channel via the bias (dt_rank=1)
+    dt = jax.nn.softplus(nn.dense(xc, p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"])
+    return dt, bmat, cmat
+
+
+def _mamba_scan(xc, dt, bmat, cmat, a, *, chunk: int, state0):
+    """Chunked selective scan.  xc: (b,t,di); dt: (b,t,di); bmat/cmat: (b,t,n);
+    a: (di,n) negative.  state: (b,di,n).  Returns (y (b,t,di), state)."""
+    b, t, di = xc.shape
+    n = a.shape[-1]
+    pad = (-t) % chunk
+    if pad:
+        xc, dt = (jnp.pad(x, ((0, 0), (0, pad), (0, 0))) for x in (xc, dt))
+        bmat, cmat = (jnp.pad(x, ((0, 0), (0, pad), (0, 0))) for x in (bmat, cmat))
+    tc = xc.shape[1] // chunk
+    chunked = lambda x: x.reshape(b, tc, chunk, x.shape[-1]).transpose(1, 0, 2, 3)
+    xcc, dtc, bc, cc = map(chunked, (xc, dt, bmat, cmat))
+
+    def one_chunk(s_in, xs):
+        xi, dti, bi, ci = xs                                  # (b,chunk,...)
+        # scan inputs in the model compute dtype (bf16 in production; the
+        # chunk-boundary state correction stays f32): halves the dominant
+        # (b,c,di,n) HBM traffic — §Perf B1.  fp32 configs are unaffected.
+        kv = ((dti * xi.astype(jnp.float32))[..., None]
+              * bi[:, :, None, :]).astype(xi.dtype)
+        # inclusive prefix states via associative scan over the chunk.
+        # (§Perf B3 note: carrying the decay leg rank-1 as the (b,c,di)
+        # dt-sum and expanding exp(dt (x) a) inside the combine measured
+        # WORSE — the per-stage exp temporaries replace the saved A-leg
+        # traffic; refuted, kept the direct form.)
+        log_a = dti[..., None] * a                            # (b,c,di,n) f32
+        def comb(l, r):
+            al, sl = l
+            ar, sr = r
+            return al + ar, sl * jnp.exp(ar).astype(sl.dtype) + sr
+        _, s_pref = jax.lax.associative_scan(comb, (log_a, kv), axis=1)
+        # prefix states stay in compute dtype (feed the output gate only);
+        # chunk-boundary corrections use the rank-1 dt cumsum ((b,c,di)
+        # instead of (b,c,di,n) — §Perf B3b, the part of B3 that does win)
+        acc_dt = jnp.cumsum(dti, axis=1)                      # (b,c,di)
+        corr = jnp.exp(acc_dt[..., None] * a) * s_in[:, None]
+        s_tot = s_pref + corr.astype(s_pref.dtype)
+        y = jnp.einsum("bcdn,bcn->bcd", s_tot, ci.astype(s_tot.dtype))
+        s_out = s_pref[:, -1].astype(jnp.float32) + \
+            jnp.exp(acc_dt[:, -1][..., None] * a) * s_in
+        return s_out, y.astype(xc.dtype)
+
+    state, ys = jax.lax.scan(one_chunk, state0, (xcc, dtc, bc, cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, tc * chunk, di)
+    return y[:, :t], state
+
+
+def mamba(x, p, cfg, *, chunk: int = 128):
+    """Full-sequence Mamba path. x: (b, t, d) -> (b, t, d)."""
+    xz = nn.dense(x, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, _ = _causal_conv(xi, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    xc = nn.act_shard(xc, ("batch", None, "dff"))
+    dt, bmat, cmat = _dt_b_c(xc, p)
+    a = -jnp.exp(p["a_log"])
+    state0 = jnp.zeros((x.shape[0], p["a_log"].shape[0], cfg.ssm_state),
+                       jnp.float32)
+    y, _ = _mamba_scan(xc, dt, bmat, cmat, a, chunk=chunk, state0=state0)
+    y = y.astype(jnp.float32) + p["d_skip"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return nn.dense(y, p["out_proj"])
+
+
+def init_mamba_cache(cfg, batch: int, dtype) -> dict:
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, di), dtype),
+        "state": jnp.zeros((cfg.n_layers, batch, di, cfg.ssm_state),
+                           jnp.float32),
+    }
+
+
+MAMBA_CACHE_LOGICAL = {"conv": (None, "batch", None, "dff"),
+                       "state": (None, "batch", "dff", None)}
+
+
+def mamba_decode(x, p, cfg, cache_layer):
+    """One-token step. x: (b, 1, d) -> (out (b,1,d), new cache)."""
+    xz = nn.dense(x, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(xi, p["conv_w"], p["conv_b"],
+                                  state=cache_layer["conv"])
+    xc = jax.nn.silu(xc)
+    dt, bmat, cmat = _dt_b_c(xc[:, 0], p)                    # (b, di), (b, n)
+    a = -jnp.exp(p["a_log"])
+    log_a = dt[..., None] * a                                # (b, di, n)
+    kv = (dt * xc[:, 0].astype(jnp.float32))[..., None] * bmat[:, None, :]
+    state = cache_layer["state"] * jnp.exp(log_a) + kv
+    y = jnp.einsum("bdn,bn->bd", state, cmat)
+    y = y + p["d_skip"] * xc[:, 0].astype(jnp.float32)
+    y = y[:, None].astype(x.dtype) * jax.nn.silu(z)
+    out = nn.dense(y, p["out_proj"])
+    return out, {"conv": conv_state, "state": state}

@@ -1,0 +1,221 @@
+"""Decoder-only LM assembly: scan-over-stacked-layers (compile time independent
+of depth), four block kinds (dense / moe / hymba / rwkv), full-sequence
+(train / prefill) and single-token (decode) paths, optional remat.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import modules as nn
+from repro.models import moe as moemod
+from repro.models import rwkv as rwkvmod
+from repro.models import ssm as ssmmod
+from repro.models.modules import param
+
+__all__ = ["decoder_param_specs", "stack_layer_specs", "decoder_forward",
+           "decoder_decode_step", "lm_loss", "init_caches", "cache_logical"]
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _layer_specs(cfg, dtype) -> dict:
+    d = cfg.d_model
+    if cfg.kind == "rwkv":
+        p = rwkvmod.rwkv_params(cfg, dtype)
+        p["ln1"] = nn.rmsnorm_p(d, dtype)
+        p["ln2"] = nn.rmsnorm_p(d, dtype)
+        return p
+    p = {
+        "ln1": nn.rmsnorm_p(d, dtype),
+        "ln2": nn.rmsnorm_p(d, dtype),
+        "attn": attn.attn_params(cfg, dtype),
+    }
+    if cfg.kind == "moe":
+        p["moe"] = moemod.moe_params(cfg, dtype)
+    else:
+        p["mlp"] = nn.swiglu_p(d, cfg.d_ff, dtype)
+    if cfg.kind == "hymba":
+        p["mamba"] = ssmmod.mamba_params(cfg, dtype)
+    return p
+
+
+def stack_layer_specs(cfg, dtype, n_layers: int | None = None) -> dict:
+    """Layer specs with a leading stacked (L,) axis for scan."""
+    L = n_layers if n_layers is not None else cfg.n_layers
+    one = _layer_specs(cfg, dtype)
+    return jax.tree_util.tree_map(
+        lambda s: param((L,) + s.shape, s.dtype, (None,) + s.logical,
+                        init=s.init, scale=s.scale),
+        one, is_leaf=lambda x: isinstance(x, nn.ParamSpec))
+
+
+def decoder_param_specs(cfg) -> dict:
+    dtype = cfg.param_dtype
+    d = cfg.d_model
+    specs = {
+        "embed": nn.embedding_p(cfg.padded_vocab, d, dtype),
+        "layers": stack_layer_specs(cfg, dtype),
+        "final_norm": nn.rmsnorm_p(d, dtype),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = param((d, cfg.padded_vocab), dtype, (None, "vocab"))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# block bodies
+# ---------------------------------------------------------------------------
+
+def _block(x, p, cfg, pos0=0):
+    """Full-sequence block.  Returns (x, aux_losses).
+
+    The block-entry residual is constrained to *sequence parallelism*
+    (seq sharded on the model axis): the rematerialized per-layer saved
+    buffers then live seq-sharded (Megatron-SP), and GSPMD inserts the
+    all-gather into the head-sharded attention domain."""
+    x = nn.act_shard(x, ("batch", "seq_sp", None))
+    aux = {"aux_loss": jnp.zeros((), jnp.float32),
+           "router_zloss": jnp.zeros((), jnp.float32)}
+    if cfg.kind == "rwkv":
+        x = x + rwkvmod.rwkv_time_mix(nn.rmsnorm(x, p["ln1"], cfg.norm_eps), p["tm"], cfg)
+        x = x + rwkvmod.rwkv_channel_mix(nn.rmsnorm(x, p["ln2"], cfg.norm_eps), p["cm"], cfg)
+        return x, aux
+    h = nn.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a = attn.attention(h, p["attn"], cfg, pos0=pos0)
+    if cfg.kind == "hymba":
+        a = a + ssmmod.mamba(h, p["mamba"], cfg)
+    # constrain the row-parallel output to the seq-sharded layout *before*
+    # the residual add so GSPMD forms reduce-scatter instead of
+    # all-reduce + slice (§Perf iteration A3)
+    a = nn.act_shard(a, ("batch", "seq_sp", None))
+    x = x + a
+    h = nn.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.kind == "moe":
+        m, aux = moemod.moe_ffn(h, p["moe"], cfg)
+    else:
+        m = nn.swiglu(h, p["mlp"])
+    m = nn.act_shard(m, ("batch", "seq_sp", None))
+    return x + m, aux
+
+
+def _block_decode(x, p, cfg, cache, pos):
+    """Single-token block.  cache: this layer's slice.  Returns (x, cache)."""
+    if cfg.kind == "rwkv":
+        h = nn.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        o, x_tm, state = rwkvmod.rwkv_time_mix_decode(h, p["tm"], cfg,
+                                                      cache["x_tm"], cache["state"])
+        x = x + o
+        h = nn.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        o, x_cm = rwkvmod.rwkv_channel_mix_decode(h, p["cm"], cfg, cache["x_cm"])
+        return x + o, {"x_tm": x_tm, "x_cm": x_cm, "state": state}
+    new_cache = {}
+    h = nn.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a, new_cache["kv"] = attn.attention_decode(h, p["attn"], cfg, cache["kv"], pos)
+    if cfg.kind == "hymba":
+        o, new_cache["mamba"] = ssmmod.mamba_decode(h, p["mamba"], cfg, cache["mamba"])
+        a = a + o
+    x = x + a
+    h = nn.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.kind == "moe":
+        m, _ = moemod.moe_ffn(h, p["moe"], cfg)
+    else:
+        m = nn.swiglu(h, p["mlp"])
+    return x + m, new_cache
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _embed_in(params, cfg, tokens, extra_embeds=None):
+    x = params["embed"].astype(cfg.param_dtype)[tokens]
+    if extra_embeds is not None:                       # VLM stub: patch prefix
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    return nn.act_shard(x, ("batch", None, None))
+
+
+def _logits_out(x, params, cfg):
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return nn.act_shard(logits, ("batch", None, "vocab"))
+
+
+def decoder_forward(params, cfg, tokens, *, extra_embeds=None, pos0: int = 0):
+    """tokens: (b, s) -> (logits (b, s', vocab), aux)."""
+    x = _embed_in(params, cfg, tokens, extra_embeds)
+
+    def body(carry, layer_p):
+        y, aux = _block(carry, layer_p, cfg, pos0=pos0)
+        return y, aux
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    x, auxs = jax.lax.scan(body_fn, x, params["layers"])
+    x = nn.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    aux = jax.tree_util.tree_map(jnp.sum, auxs)
+    return _logits_out(x, params, cfg), aux
+
+
+def init_caches(cfg, batch: int, max_seq: int, dtype) -> dict:
+    if cfg.kind == "rwkv":
+        return rwkvmod.init_rwkv_cache(cfg, batch, dtype)
+    kv = attn.init_kv_cache(cfg, batch, max_seq, dtype)
+    cache = {"kv": {"k": kv["k"], "v": kv["v"]}}
+    if cfg.kind == "hymba":
+        cache["mamba"] = ssmmod.init_mamba_cache(cfg, batch, dtype)
+    return cache
+
+
+def cache_logical(cfg) -> dict:
+    if cfg.kind == "rwkv":
+        return dict(rwkvmod.RWKV_CACHE_LOGICAL)
+    out = {"kv": dict(attn.KV_CACHE_LOGICAL)}
+    if cfg.kind == "hymba":
+        out["mamba"] = dict(ssmmod.MAMBA_CACHE_LOGICAL)
+    return out
+
+
+def decoder_decode_step(params, cfg, token, caches, pos):
+    """token: (b, 1) -> (logits (b, 1, vocab), new caches).  ``caches`` carry a
+    leading layer axis; the scan threads per-layer slices."""
+    x = _embed_in(params, cfg, token)
+
+    def body(carry, xs):
+        layer_p, cache = xs
+        y, new_cache = _block_decode(carry, layer_p, cfg, cache, pos)
+        return y, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+    x = nn.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return _logits_out(x, params, cfg), new_caches
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(logits, labels, mask=None, aux=None):
+    """Next-token CE (labels already shifted by the data pipeline)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    loss = jnp.sum(nll * mask) / jnp.clip(jnp.sum(mask), 1)
+    metrics = {"ce": loss}
+    if aux:
+        for k, v in aux.items():
+            loss = loss + v
+            metrics[k] = v
+    metrics["loss"] = loss
+    return loss, metrics

@@ -1,0 +1,129 @@
+"""Public model API: build any assigned architecture from its config.
+
+``Model`` bundles init / loss / prefill / decode for one ``ModelConfig``;
+``input_specs`` produces ShapeDtypeStruct stand-ins for every model input of a
+(config x shape-suite) cell — the dry-run lowers against these without
+allocating anything (same pattern for modality stubs: whisper gets precomputed
+frame embeddings, pixtral precomputed patch embeddings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSuite
+from repro.models import encdec as ed
+from repro.models import modules as nn
+from repro.models import transformer as tf
+
+__all__ = ["Model", "build", "input_specs", "batch_logical"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+
+    # ---- parameters -------------------------------------------------------
+    def param_specs(self):
+        if self.cfg.kind == "encdec":
+            return ed.encdec_param_specs(self.cfg)
+        return tf.decoder_param_specs(self.cfg)
+
+    def init(self, key) -> dict:
+        return nn.init_tree(self.param_specs(), key)
+
+    def param_logical(self):
+        return nn.logical_tree(self.param_specs())
+
+    def param_shapes(self):
+        return nn.shape_tree(self.param_specs())
+
+    # ---- training ---------------------------------------------------------
+    def forward(self, params, batch):
+        cfg = self.cfg
+        if cfg.kind == "encdec":
+            return ed.encdec_forward(params, cfg, batch["tokens"], batch["frames"])
+        logits, aux = tf.decoder_forward(
+            params, cfg, batch["tokens"], extra_embeds=batch.get("images"))
+        if cfg.n_img_tokens and "images" in batch:
+            logits = logits[:, cfg.n_img_tokens:]
+        return logits, aux
+
+    def loss_fn(self, params, batch):
+        logits, aux = self.forward(params, batch)
+        return tf.lm_loss(logits, batch["labels"], batch.get("mask"), aux)
+
+    # ---- serving ----------------------------------------------------------
+    def init_caches(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        dt = cfg.param_dtype
+        if cfg.kind == "encdec":
+            return ed.init_encdec_caches(cfg, batch, max_seq, dt)
+        return tf.init_caches(cfg, batch, max_seq, dt)
+
+    def cache_logical(self):
+        if self.cfg.kind == "encdec":
+            return ed.encdec_cache_logical(self.cfg)
+        return tf.cache_logical(self.cfg)
+
+    def prefill(self, params, batch):
+        """Full-sequence forward for serving (logits over the prompt)."""
+        return self.forward(params, batch)[0]
+
+    def decode_step(self, params, token, caches, pos):
+        cfg = self.cfg
+        if cfg.kind == "encdec":
+            return ed.encdec_decode_step(params, cfg, token, caches, pos)
+        return tf.decoder_decode_step(params, cfg, token, caches, pos)
+
+
+def build(cfg) -> Model:
+    return Model(cfg)
+
+
+def input_specs(cfg, suite: ShapeSuite, *, per_pod_batch: int | None = None
+                ) -> dict:
+    """ShapeDtypeStruct stand-ins for one (arch x shape) cell.
+
+    train/prefill: token batch (+ labels/mask for train, + modality stubs).
+    decode: one new token + position (caches are built separately — they are
+    state, not inputs, but the dry-run passes them as donated args).
+    """
+    b = per_pod_batch or suite.global_batch
+    s = suite.seq_len
+    d = cfg.d_model
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if suite.mode == "decode":
+        return {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    out = {"tokens": tok}
+    if suite.mode == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        out["mask"] = jax.ShapeDtypeStruct((b, s), jnp.float32)
+    if cfg.kind == "encdec":
+        out["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_seq, d), cfg.param_dtype)
+    if cfg.n_img_tokens:
+        out["images"] = jax.ShapeDtypeStruct((b, cfg.n_img_tokens, d),
+                                             cfg.param_dtype)
+        if suite.mode == "train":
+            # labels cover token positions only
+            out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return out
+
+
+def batch_logical(cfg, suite: ShapeSuite) -> dict:
+    """Logical sharding for each batch input (batch axis -> DP)."""
+    if suite.mode == "decode":
+        return {"token": ("batch", None)}
+    out = {"tokens": ("batch", None)}
+    if suite.mode == "train":
+        out["labels"] = ("batch", None)
+        out["mask"] = ("batch", None)
+    if cfg.kind == "encdec":
+        out["frames"] = ("batch", None, None)
+    if cfg.n_img_tokens:
+        out["images"] = ("batch", None, None)
+    return out

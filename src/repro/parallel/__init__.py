@@ -1,0 +1,6 @@
+"""repro.parallel — mesh-aware sharding rules, collectives, compression."""
+
+from repro.parallel.sharding import (
+    AxisRules, set_rules, current_rules, act_shard, logical_spec,
+    param_shardings, zero1_shardings, DEFAULT_RULES, MULTIPOD_RULES,
+)

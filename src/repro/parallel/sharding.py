@@ -1,0 +1,157 @@
+"""Logical-axis sharding rules (Megatron/GSPMD style).
+
+Model code annotates tensors with *logical* axis names ("batch", "vocab",
+"model_in", ...); the launch layer installs an ``AxisRules`` mapping those to
+physical mesh axes.  This keeps model definitions mesh-agnostic: the same
+code lowers on a single-pod (data, model) mesh, a multi-pod
+(pod, data, model) mesh, or a 1-device CPU test with no rules installed
+(annotations become no-ops).
+
+Rules used by this framework:
+
+  batch     -> ("pod", "data")  (DP over pod x data; hierarchical all-reduce)
+  model_in  -> "model"          (column-parallel weight input dim)
+  model_out -> "model"          (row-parallel weight output dim)
+  vocab     -> "model"          (vocab-parallel embedding + lm head)
+  heads/kv  -> "model"          (attention-head parallelism)
+  expert    -> "model"          (expert parallelism for MoE)
+  seq       -> "model" only inside sequence-parallel sections (opt-in)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "AxisRules", "set_rules", "current_rules", "act_shard", "logical_spec",
+    "param_shardings", "zero1_shardings", "DEFAULT_RULES", "MULTIPOD_RULES",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """logical name -> mesh axis (or tuple of axes, or None)."""
+    rules: tuple[tuple[str, tuple[str, ...] | str | None], ...]
+    mesh: Mesh | None = None
+
+    def lookup(self, name: str | None):
+        if name is None:
+            return None
+        for k, v in self.rules:
+            if k == name:
+                return v
+        return None
+
+    def spec(self, logical: tuple[str | None, ...]) -> P:
+        phys = []
+        used: set[str] = set()
+        for name in logical:
+            ax = self.lookup(name)
+            if isinstance(ax, tuple):
+                ax = tuple(a for a in ax if self._has(a) and a not in used)
+                ax = ax if ax else None
+            elif ax is not None and (not self._has(ax) or ax in used):
+                ax = None
+            if ax is not None:
+                used.update(ax if isinstance(ax, tuple) else (ax,))
+            phys.append(ax)
+        return P(*phys)
+
+    def _has(self, axis: str) -> bool:
+        return self.mesh is None or axis in self.mesh.shape
+
+
+_SINGLE = (
+    ("batch", ("data",)),
+    ("seq_kv", ("data",)),        # long-context decode: shard cache seq, not batch
+    ("model_in", "model"),
+    ("model_out", "model"),
+    ("vocab", "model"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("expert", "model"),
+    ("dff", "model"),
+    ("seq_sp", "model"),
+)
+_MULTI = (("batch", ("pod", "data")),
+          ("seq_kv", ("pod", "data"))) + _SINGLE[2:]
+
+DEFAULT_RULES = AxisRules(_SINGLE)
+MULTIPOD_RULES = AxisRules(_MULTI)
+
+_tls = threading.local()
+
+
+def set_rules(rules: AxisRules | None):
+    _tls.rules = rules
+
+
+def current_rules() -> AxisRules | None:
+    return getattr(_tls, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: AxisRules | None):
+    prev = current_rules()
+    set_rules(rules)
+    try:
+        yield
+    finally:
+        set_rules(prev)
+
+
+def logical_spec(logical: tuple[str | None, ...]) -> P:
+    r = current_rules()
+    return r.spec(logical) if r is not None else P()
+
+
+def act_shard(x: jax.Array, logical: tuple[str | None, ...]) -> jax.Array:
+    """Annotate an activation with its logical sharding (no-op w/o rules)."""
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return x
+    spec = r.spec(logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))
+
+
+def param_shardings(logical_tree, rules: AxisRules):
+    """Pytree of logical tuples -> pytree of NamedShardings."""
+    assert rules.mesh is not None
+
+    def one(logical):
+        return NamedSharding(rules.mesh, rules.spec(logical))
+
+    return jax.tree_util.tree_map(one, logical_tree,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+
+
+def zero1_shardings(logical_tree, shape_tree, rules: AxisRules,
+                    dp_axes: tuple[str, ...] = ("data",)):
+    """ZeRO-1: optimizer-state shardings = param sharding + DP sharding on the
+    first still-unsharded, divisible dimension (states live scattered over the
+    data-parallel group; XLA inserts the gather in the update)."""
+    assert rules.mesh is not None
+    dp_axes = tuple(a for a in dp_axes if a in rules.mesh.shape)
+    dp = 1
+    for a in dp_axes:
+        dp *= rules.mesh.shape[a]
+
+    def one(logical, shape):
+        spec = list(rules.spec(logical))
+        spec += [None] * (len(shape) - len(spec))
+        if dp > 1:
+            for i, (ax, dim) in enumerate(zip(spec, shape)):
+                if ax is None and dim % dp == 0 and dim >= dp:
+                    spec[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+                    break
+        return NamedSharding(rules.mesh, P(*spec))
+
+    return jax.tree_util.tree_map(
+        one, logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

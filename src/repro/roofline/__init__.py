@@ -1,0 +1,4 @@
+"""repro.roofline — loop-aware HLO cost extraction + 3-term roofline."""
+from repro.roofline.analysis import RooflineReport, analyze, model_flops
+from repro.roofline.hlo_parse import parse_module
+from repro.roofline import hw

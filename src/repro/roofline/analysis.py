@@ -1,0 +1,97 @@
+"""Three-term roofline from a compiled dry-run artifact (task §Roofline).
+
+  compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory     = HLO_bytes / (chips * HBM_bw)
+  collective = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from the loop-aware HLO walker (hlo_parse — XLA's
+own cost_analysis counts while bodies once; we also record its raw numbers for
+reference).  The walker works on the *per-device* SPMD module, so flops/bytes
+are already per-chip: the "/(chips * X)" normalization is folded in by NOT
+re-multiplying by chips.  MODEL_FLOPS uses 6·N·D (training) / 2·N·D
+(inference) with N = active params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.roofline import hw
+from repro.roofline.hlo_parse import parse_module
+
+__all__ = ["RooflineReport", "analyze", "model_flops"]
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    suite: str
+    mesh: str
+    chips: int
+    # per-device, loop-scaled
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: dict
+    coll_counts: dict
+    # raw XLA numbers (loop-undercounted; reference only)
+    xla_flops: float
+    xla_bytes: float
+    # memory_analysis
+    bytes_per_device: float
+    # derived terms (seconds)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops_global: float
+    useful_ratio: float
+    bottleneck: str
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg, suite) -> float:
+    """Analytic MODEL_FLOPS for one step: 6·N_active·D train, 2·N_active·D
+    inference (D = processed tokens; decode: one token per sequence)."""
+    n = cfg.active_params()
+    if suite.mode == "train":
+        tokens = suite.global_batch * suite.seq_len
+        return 6.0 * n * tokens
+    if suite.mode == "prefill":
+        tokens = suite.global_batch * suite.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * suite.global_batch          # decode: 1 token/seq
+
+
+def analyze(*, arch: str, suite, mesh_name: str, chips: int, hlo_text: str,
+            cost: dict, mem: object | None, cfg) -> RooflineReport:
+    parsed = parse_module(hlo_text)
+    mf = model_flops(cfg, suite)
+
+    t_comp = parsed.dot_flops / hw.PEAK_FLOPS_BF16
+    t_mem = parsed.hbm_bytes / hw.HBM_BW
+    t_coll = parsed.total_coll_bytes / hw.ICI_BW
+
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+
+    bytes_dev = 0.0
+    if mem is not None:
+        try:
+            bytes_dev = float(mem.argument_size_in_bytes +
+                              mem.output_size_in_bytes +
+                              mem.temp_size_in_bytes +
+                              mem.generated_code_size_in_bytes)
+        except Exception:
+            bytes_dev = 0.0
+
+    useful = mf / max(parsed.dot_flops * chips, 1.0)
+    return RooflineReport(
+        arch=arch, suite=suite.name, mesh=mesh_name, chips=chips,
+        hlo_flops=parsed.dot_flops, hlo_bytes=parsed.hbm_bytes,
+        coll_bytes=parsed.coll_bytes, coll_counts=parsed.coll_counts,
+        xla_flops=float(cost.get("flops", 0.0)),
+        xla_bytes=float(cost.get("bytes accessed", 0.0)),
+        bytes_per_device=bytes_dev,
+        t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+        model_flops_global=mf, useful_ratio=useful, bottleneck=bottleneck)

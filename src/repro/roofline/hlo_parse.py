@@ -1,0 +1,226 @@
+"""Loop-aware HLO text walker.
+
+XLA's HloCostAnalysis visits ``while`` bodies once (verified empirically), so
+for scan-over-layers models the reported flops/bytes/collectives undercount by
+the trip count.  The compiled HLO text carries the exact trip counts
+(``backend_config={"known_trip_count":{"n":"32"}}``), so we walk the module:
+
+  * split into computations; build a symbol table (name -> dtype/shape) per
+    computation;
+  * build the call graph: while(cond, body) edges weighted by trip count,
+    fusion/call edges weighted 1;
+  * per computation, account dot flops (2 * prod(result) * K_contracted),
+    collective traffic (ring model per hw.COLLECTIVE_FACTORS) and an HBM
+    traffic proxy (result + operand bytes of top-level non-trivial ops);
+  * aggregate along the call graph from ENTRY with multipliers.
+
+This yields loop-scaled HLO_FLOPs, HLO_bytes, and per-collective-kind bytes
+per device — the inputs to the three-term roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.roofline import hw
+
+__all__ = ["parse_module", "ModuleCosts"]
+
+# computation headers start at column 0 (ops are indented); params may contain
+# nested tuple parens, so only anchor on the name and the trailing '{'
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+)\s*\(.*\{\s*$")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*([a-z0-9]+)\[([0-9,]*)\][^\s]*\s+"
+    r"([\w\-]+)\(([^\n]*)$")
+_TUPLE_LINE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*\(")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_OLD = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_OPERAND = re.compile(r"%[\w\.\-]+")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "copy", "copy-start", "copy-done", "after-all", "partition-id",
+    "replica-id", "iota",
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+@dataclasses.dataclass
+class CompCosts:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    coll_counts: dict = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in _COLLECTIVES})
+    calls: list = dataclasses.field(default_factory=list)  # (callee, mult)
+
+
+@dataclasses.dataclass
+class ModuleCosts:
+    dot_flops: float
+    hbm_bytes: float
+    coll_bytes: dict           # kind -> ring-model bytes per device
+    coll_counts: dict
+    n_while: int
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+def _shape_bytes(dtype: str, dims: str) -> tuple[float, list[int]]:
+    bs = hw.DTYPE_BYTES.get(dtype)
+    if bs is None:
+        return 0.0, []
+    shape = [int(x) for x in dims.split(",") if x] if dims else []
+    n = 1
+    for d in shape:
+        n *= d
+    return float(n * bs), shape
+
+
+def parse_module(text: str) -> ModuleCosts:
+    comps: dict[str, CompCosts] = {}
+    symtab: dict[str, dict[str, tuple[str, str]]] = {}
+    fusion_bodies: set[str] = set()
+    entry = None
+    cur = None
+    n_while = 0
+
+    for raw in text.splitlines():
+        hdr = _COMP_HDR.match(raw)
+        if hdr:
+            cur = hdr.group(1).lstrip("%")
+            comps[cur] = CompCosts()
+            symtab[cur] = {}
+            if raw.startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        if raw.strip() == "}":
+            cur = None
+            continue
+        # while ops are tuple-typed -> handled before the shaped-op regex
+        if " while(" in raw:
+            n_while += 1
+            t = _TRIP.search(raw)
+            trip = int(t.group(1)) if t else 1
+            cm = re.search(r"body=(%[\w\.\-]+)", raw)
+            if cm:
+                comps[cur].calls.append((cm.group(1).lstrip("%"), trip))
+            continue
+        if " conditional(" in raw:
+            cm = re.search(r"branch_computations=\{([^}]*)\}", raw)
+            if cm:
+                for bname in _OPERAND.findall(cm.group(1)):
+                    comps[cur].calls.append((bname.lstrip("%"), 1))
+            continue
+        m = _OP_LINE.match(raw)
+        if not m:
+            continue
+        name, dtype, dims, op, rest = m.groups()
+        symtab[cur][name] = (dtype, dims)
+        cc = comps[cur]
+
+        if op == "call":
+            cm = re.search(r"to_apply=(%[\w\.\-]+)", raw)
+            if cm:
+                cc.calls.append((cm.group(1).lstrip("%"), 1))
+        cm = re.search(r"calls=(%[\w\.\-]+)", raw)
+        if cm:
+            callee = cm.group(1).lstrip("%")
+            cc.calls.append((callee, 1))
+            if op == "fusion":
+                # fusion internals never touch HBM: keep their dot flops,
+                # drop their byte accounting (the fusion op at the call site
+                # already accounts result+operand HBM traffic)
+                fusion_bodies.add(callee)
+        cm = re.search(r"branch_computations=\{([^}]*)\}", raw)
+        if cm:
+            for b in _OPERAND.findall(cm.group(1)):
+                cc.calls.append((b.lstrip("%"), 1))
+
+        rbytes, rshape = _shape_bytes(dtype, dims)
+
+        if op == "dot":
+            k = _contracted(rest, symtab[cur], rshape)
+            cc.dot_flops += 2.0 * (rbytes / max(hw.DTYPE_BYTES.get(dtype, 1), 1)) * k
+        if op in _COLLECTIVES:
+            g = _group_size(raw)
+            factor = hw.COLLECTIVE_FACTORS[op](g)
+            payload = rbytes
+            if op == "all-gather":                 # operand = result / g
+                payload = rbytes / max(g, 1)
+                factor = (g - 1)                   # receives (g-1) shards
+            cc.coll_bytes[op] += payload * factor
+            cc.coll_counts[op] += 1
+        if op not in _SKIP_BYTES_OPS and op != "while":
+            opbytes = 0.0
+            for oname in _OPERAND.findall(rest.split(", calls=")[0])[:8]:
+                if oname in symtab[cur]:
+                    od, odims = symtab[cur][oname]
+                    b, _ = _shape_bytes(od, odims)
+                    opbytes += b
+            cc.hbm_bytes += rbytes + opbytes
+
+    if entry is None:
+        entry = next(iter(comps))
+
+    memo: dict[str, tuple] = {}
+
+    def roll(name: str) -> tuple:
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None:
+            return 0.0, 0.0, {k: 0.0 for k in _COLLECTIVES}, {k: 0 for k in _COLLECTIVES}
+        memo[name] = (0.0, 0.0, {k: 0.0 for k in _COLLECTIVES},
+                      {k: 0 for k in _COLLECTIVES})      # cycle guard
+        f = c.dot_flops
+        b = 0.0 if name in fusion_bodies else c.hbm_bytes
+        cb = dict(c.coll_bytes)
+        cn = dict(c.coll_counts)
+        for callee, mult in c.calls:
+            cf, cbb, ccb, ccn = roll(callee)
+            f += mult * cf
+            b += mult * cbb
+            for k in cb:
+                cb[k] += mult * ccb[k]
+                cn[k] += mult * ccn[k]
+        memo[name] = (f, b, cb, cn)
+        return memo[name]
+
+    f, b, cb, cn = roll(entry)
+    return ModuleCosts(dot_flops=f, hbm_bytes=b, coll_bytes=cb,
+                       coll_counts=cn, n_while=n_while)
+
+
+def _contracted(rest: str, table: dict, rshape: list[int]) -> float:
+    """Contracted-dim product for a dot: from lhs shape + contracting dims."""
+    ops = _OPERAND.findall(rest)
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rest)
+    if not ops or not cm or ops[0] not in table:
+        return 1.0
+    _, dims = table[ops[0]]
+    shape = [int(x) for x in dims.split(",") if x] if dims else []
+    k = 1.0
+    for i in (int(x) for x in cm.group(1).split(",") if x):
+        if i < len(shape):
+            k *= shape[i]
+    return k
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_OLD.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1

@@ -1,0 +1,29 @@
+"""TPU v5e-class hardware constants for the roofline model (task-specified).
+
+Collective traffic factors follow the ring model: an all-reduce moves
+2(g-1)/g bytes per participating chip per payload byte, all-gather /
+reduce-scatter / all-to-all move (g-1)/g, collective-permute moves 1.
+"""
+
+from __future__ import annotations
+
+PEAK_FLOPS_BF16 = 197e12         # per chip
+HBM_BW = 819e9                   # bytes/s per chip
+ICI_BW = 50e9                    # bytes/s per link (~ICI)
+
+CHIPS_SINGLE_POD = 256
+CHIPS_MULTI_POD = 512
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_FACTORS = {
+    "all-reduce": lambda g: 2 * (g - 1) / max(g, 1),
+    "all-gather": lambda g: (g - 1) / max(g, 1),
+    "reduce-scatter": lambda g: (g - 1) / max(g, 1),
+    "all-to-all": lambda g: (g - 1) / max(g, 1),
+    "collective-permute": lambda g: 1.0,
+}

@@ -1,0 +1,93 @@
+"""Render the §Dry-run / §Roofline tables from reports/dryrun/*.json.
+
+  PYTHONPATH=src python -m repro.roofline.report [--dir reports/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.roofline import hw
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dir_: str) -> list[dict]:
+    out = []
+    for name in sorted(os.listdir(dir_)):
+        if name.endswith(".json"):
+            with open(os.path.join(dir_, name)) as f:
+                out.append(json.load(f))
+    return out
+
+
+def fmt_s(x) -> str:
+    return f"{x:.3g}"
+
+
+def roofline_table(cells: list[dict], mesh: str = "single") -> str:
+    rows = [c for c in cells if c.get("mesh") == mesh and c["status"] == "ok"]
+    rows.sort(key=lambda c: (c["arch"], ORDER.index(c["suite"])))
+    hdr = ("| arch | shape | compute s | memory s | collective s | bottleneck "
+           "| MODEL_FLOPS | useful | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for c in rows:
+        tmax = max(c["t_compute"], c["t_memory"], c["t_collective"])
+        frac = c["t_compute"] / tmax if tmax > 0 else 0.0
+        out.append(
+            f"| {c['arch']} | {c['suite']} | {fmt_s(c['t_compute'])} "
+            f"| {fmt_s(c['t_memory'])} | {fmt_s(c['t_collective'])} "
+            f"| {c['bottleneck']} | {c['model_flops_global']:.2e} "
+            f"| {c['useful_ratio']:.2f} | {frac:.3f} |\n")
+    return "".join(out)
+
+
+def dryrun_table(cells: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | chips | HLO GFLOP/dev | HBM GB/dev "
+           "| coll GB/dev | ar/ag/rs/a2a/cp counts | status |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for c in sorted(cells, key=lambda c: (c["arch"],
+                                          ORDER.index(c.get("suite", "train_4k"))
+                                          if c.get("suite") in ORDER else 9,
+                                          c.get("mesh", ""))):
+        if c["status"] != "ok":
+            out.append(f"| {c['cell']} | | | | | | | | ERROR |\n")
+            continue
+        cb = c["coll_bytes"]
+        cn = c["coll_counts"]
+        counts = "/".join(str(cn.get(k, 0)) for k in
+                          ("all-reduce", "all-gather", "reduce-scatter",
+                           "all-to-all", "collective-permute"))
+        out.append(
+            f"| {c['arch']} | {c['suite']} | {c['mesh']} | {c['chips']} "
+            f"| {c['hlo_flops'] / 1e9:.1f} | {c['hlo_bytes'] / 1e9:.2f} "
+            f"| {sum(cb.values()) / 1e9:.3f} | {counts} | ok |\n")
+    return "".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join("reports", "dryrun"))
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--kind", default="roofline",
+                    choices=["roofline", "dryrun", "both"])
+    args = ap.parse_args()
+    cells = load(args.dir)
+    n_ok = sum(c["status"] == "ok" for c in cells)
+    print(f"cells: {n_ok}/{len(cells)} ok\n")
+    if args.kind in ("roofline", "both"):
+        print(f"### Roofline ({args.mesh}-pod, {hw.PEAK_FLOPS_BF16/1e12:.0f} "
+              f"TFLOP/s, {hw.HBM_BW/1e9:.0f} GB/s HBM, "
+              f"{hw.ICI_BW/1e9:.0f} GB/s link)\n")
+        print(roofline_table(cells, args.mesh))
+    if args.kind in ("dryrun", "both"):
+        print("### Dry-run inventory\n")
+        print(dryrun_table(cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro.serve — static-shape continuous-batching engine."""
+from repro.serve.engine import Engine, Request, ServeConfig

@@ -1,0 +1,127 @@
+"""Batched serving engine: continuous batching with static shapes.
+
+Requests queue up; up to ``max_batch`` live in fixed KV-cache slots with
+*per-slot positions* (decode_step takes a (b,) position vector).  Every round
+issues ONE batched decode step: prefilling slots feed their next prompt token,
+generating slots feed their last sampled token, finished slots are refilled
+from the queue.  This is the static-shape (TPU-friendly) formulation of
+continuous batching — no recompilation as requests come and go.
+
+Greedy sampling; the padded-vocab tail is masked at sample time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Request", "ServeConfig", "Engine"]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    frames: np.ndarray | None = None          # enc-dec (whisper) stub input
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 4
+    max_seq: int = 128
+    eos_id: int = -1                          # -1: never stop early
+
+
+class _Slot:
+    __slots__ = ("req", "pos", "k", "next_tok")
+
+    def __init__(self, req):
+        self.req = req
+        self.pos = 0                          # next cache position to write
+        self.k = 0                            # prompt cursor
+        self.next_tok = req.prompt[0]
+
+
+class Engine:
+    def __init__(self, model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._decode = jax.jit(model.decode_step)
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self.slots: list[_Slot | None] = [None] * cfg.max_batch
+        self.caches = model.init_caches(cfg.max_batch, cfg.max_seq)
+        self._is_encdec = model.cfg.kind == "encdec"
+        if self._is_encdec:
+            d = model.cfg.d_model
+            self._frames = np.zeros((cfg.max_batch, model.cfg.enc_seq, d),
+                                    np.float32)
+
+    def submit(self, req: Request):
+        assert len(req.prompt) >= 1
+        self.queue.append(req)
+
+    def _admit(self):
+        refreshed = False
+        for i in range(self.cfg.max_batch):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = _Slot(req)
+                if self._is_encdec:
+                    fr = req.frames if req.frames is not None else 0.0
+                    self._frames[i] = fr
+                    refreshed = True
+        if refreshed:
+            from repro.models.encdec import fill_cross_cache
+            self.caches = fill_cross_cache(
+                self.params, self.model.cfg, jnp.asarray(self._frames),
+                self.caches)
+
+    def step(self) -> int:
+        """One batched decode round.  Returns number of active slots."""
+        self._admit()
+        act = [i for i, s in enumerate(self.slots) if s is not None]
+        if not act:
+            return 0
+        b = self.cfg.max_batch
+        toks = np.zeros((b, 1), np.int32)
+        pos = np.zeros((b,), np.int32)
+        for i in act:
+            s = self.slots[i]
+            toks[i, 0] = s.next_tok
+            pos[i] = s.pos
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(toks), self.caches, jnp.asarray(pos))
+        v = self.model.cfg.vocab
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :v], axis=-1))
+        for i in act:
+            s = self.slots[i]
+            s.pos += 1
+            s.k += 1
+            if s.k < len(s.req.prompt):           # still prefilling
+                s.next_tok = int(s.req.prompt[s.k])
+                continue
+            tok = int(nxt[i])
+            s.req.output.append(tok)
+            s.next_tok = tok
+            if (tok == self.cfg.eos_id
+                    or len(s.req.output) >= s.req.max_new_tokens
+                    or s.pos >= self.cfg.max_seq - 1):
+                s.req.done = True
+                self.finished.append(s.req)
+                self.slots[i] = None
+        return len(act)
+
+    def run(self, max_rounds: int = 10_000) -> list[Request]:
+        rounds = 0
+        while (self.queue or any(self.slots)) and rounds < max_rounds:
+            self.step()
+            rounds += 1
+        return self.finished

@@ -1,0 +1,7 @@
+"""repro.train — optimizer, data, checkpointing, fault tolerance, spectral."""
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, cosine_lr
+from repro.train.trainer import Trainer
+from repro.train.data import DataConfig, batch_at, Prefetcher
+from repro.train import checkpoint
+from repro.train.ft import StragglerMonitor, FailureInjector, run_with_restarts
+from repro.train.spectral import SpectralMonitor, SpectralMonitorConfig

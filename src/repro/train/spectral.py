@@ -1,0 +1,88 @@
+"""Spectral monitoring — the paper's kernel as a first-class training feature.
+
+Every ``every`` steps the monitor computes singular-value spectra of selected
+weight (or gradient) matrices **on device** through the three-stage pipeline
+(stage 2 = the paper's bulge-chasing kernel), batch-dispatched across the mesh
+(core/distributed.py).  Consumers:
+
+* health metrics: sigma_max, stable rank ``||W||_F^2 / sigma_max^2``,
+  spectral entropy — the muP-style per-layer diagnostics;
+* ``sigma_tree`` feeding the optimizer's spectral gradient clipping
+  (optimizer.adamw_update).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributed import spectrum_of_params
+
+__all__ = ["SpectralMonitorConfig", "SpectralMonitor", "spectral_metrics"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SpectralMonitorConfig:
+    every: int = 100            # refresh period (steps)
+    size: int = 128             # square-embed size (top-k spectrum window)
+    bw: int = 16                # stage-1 target bandwidth
+    tw: int | None = None       # stage-2 inner tilewidth (None -> tuned)
+    backend: str = "auto"
+
+
+def spectral_metrics(sigma: jax.Array) -> dict:
+    """Summary stats from one descending spectrum."""
+    s = sigma.astype(jnp.float32)
+    smax = s[0]
+    fro2 = jnp.sum(s * s)
+    stable_rank = fro2 / jnp.clip(smax * smax, 1e-20)
+    p = s * s / jnp.clip(fro2, 1e-20)
+    entropy = -jnp.sum(jnp.where(p > 0, p * jnp.log(jnp.clip(p, 1e-20)), 0.0))
+    return {"sigma_max": smax, "stable_rank": stable_rank,
+            "spectral_entropy": entropy}
+
+
+class SpectralMonitor:
+    def __init__(self, cfg: SpectralMonitorConfig, mesh=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.sigma_tree: Any = None
+        self.last_refresh: int = -1
+
+    def maybe_refresh(self, step: int, tree) -> bool:
+        """Recompute spectra if due.  ``tree``: params or grads pytree."""
+        if self.last_refresh >= 0 and step - self.last_refresh < self.cfg.every:
+            return False
+        c = self.cfg
+        self.sigma_tree = spectrum_of_params(
+            tree, size=c.size, bw=c.bw, tw=c.tw, mesh=self.mesh,
+            backend=c.backend)
+        self.last_refresh = step
+        return True
+
+    def sigma_max_tree(self):
+        """Per-leaf sigma_max (None for non-matrix leaves) for the optimizer."""
+        if self.sigma_tree is None:
+            return None
+        return jax.tree_util.tree_map(
+            lambda s: None if s is None else s[..., 0],
+            self.sigma_tree, is_leaf=lambda x: x is None)
+
+    def metrics(self) -> dict:
+        out = {}
+        if self.sigma_tree is None:
+            return out
+        flat = jax.tree_util.tree_flatten_with_path(
+            self.sigma_tree, is_leaf=lambda x: x is None)[0]
+        for path, sig in flat:
+            if sig is None:
+                continue
+            name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path)
+            vec = sig.reshape(-1, sig.shape[-1])[0]      # first of stacked
+            for k, v in spectral_metrics(vec).items():
+                out[f"spectral/{name}/{k}"] = float(v)
+        return out

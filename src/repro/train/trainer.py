@@ -1,0 +1,185 @@
+"""Trainer: builds the jitted, sharded train_step for any zoo model.
+
+Features:
+* microbatch gradient accumulation (lax.scan, memory-flat);
+* logical->physical sharding for params / optimizer state (ZeRO-1) / batch;
+* optional spectral gradient clipping fed by the SpectralMonitor (the paper's
+  SVD engine);
+* optional PowerSGD gradient compression over the DP axes (shard_map with the
+  model axis left automatic);
+* state donation (params/opt buffers reused in place).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import batch_logical
+from repro.parallel import compression as comp
+from repro.parallel.sharding import (AxisRules, param_shardings, use_rules,
+                                     zero1_shardings)
+from repro.train import optimizer as optim
+
+__all__ = ["Trainer"]
+
+
+@dataclasses.dataclass
+class Trainer:
+    model: Any
+    opt_cfg: optim.AdamWConfig
+    mesh: Any = None
+    rules: AxisRules | None = None
+    accum: int = 1
+    compression: comp.CompressionConfig | None = None
+    dp_axes: tuple[str, ...] = ("data",)
+
+    # ---------------- state -----------------------------------------------
+    def _n_dp(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.dp_axes:
+            n *= self.mesh.shape.get(a, 1)
+        return n
+
+    def init_state(self, key) -> dict:
+        params = self.model.init(key)
+        state = {"params": params, "opt": optim.adamw_init(params)}
+        if self.compression is not None:
+            state["comp"] = comp.compression_init(self.compression, params,
+                                                  n_workers=self._n_dp())
+        return state
+
+    def state_shardings(self, state=None):
+        if self.rules is None or self.mesh is None:
+            return None
+        logical = self.model.param_logical()
+        shapes = self.model.param_shapes()
+        p_sh = param_shardings(logical, self.rules)
+        m_sh = zero1_shardings(logical, shapes, self.rules, self.dp_axes)
+        rep = NamedSharding(self.mesh, P())
+        out = {"params": p_sh,
+               "opt": {"step": rep, "m": m_sh, "v": m_sh}}
+        if self.compression is not None and state is not None:
+            dp = tuple(a for a in self.dp_axes if a in self.mesh.shape)
+            err_sh = NamedSharding(self.mesh, P(dp))
+
+            def comp_sh(path, leaf):
+                last = str(path[-1].key) if path else ""
+                return err_sh if last == "err" else rep
+            out["comp"] = jax.tree_util.tree_map_with_path(
+                comp_sh, state["comp"], is_leaf=lambda x: x is None)
+        return out
+
+    def batch_shardings(self, suite):
+        if self.rules is None or self.mesh is None:
+            return None
+        logical = batch_logical(self.model.cfg, suite)
+        return jax.tree_util.tree_map(
+            lambda l: NamedSharding(self.mesh, self.rules.spec(l)),
+            logical, is_leaf=lambda x: isinstance(x, tuple))
+
+    # ---------------- step ------------------------------------------------
+    def _grads(self, params, batch):
+        """Loss + grads, with microbatch accumulation if accum > 1."""
+        loss_fn = lambda p, b: self.model.loss_fn(p, b)
+        if self.accum <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        def micro(carry, mb):
+            acc_g, acc_l = carry
+            (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb)
+            acc_g = jax.tree_util.tree_map(
+                lambda a, x: a + x.astype(jnp.float32), acc_g, g)
+            return (acc_g, acc_l + loss), metrics
+
+        split = jax.tree_util.tree_map(
+            lambda x: x.reshape((self.accum, x.shape[0] // self.accum)
+                                + x.shape[1:]), batch)
+        zero_g = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss_sum), metrics = jax.lax.scan(micro, (zero_g, 0.0), split)
+        grads = jax.tree_util.tree_map(lambda g: g / self.accum, grads)
+        metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+        return loss_sum / self.accum, metrics, grads
+
+    def make_train_step(self):
+        if self.compression is not None:
+            return self._make_compressed_step()
+
+        def step(state, batch, sigma_tree=None):
+            with use_rules(self.rules):
+                loss, metrics, grads = self._grads(state["params"], batch)
+                params, opt, opt_metrics = optim.adamw_update(
+                    state["params"], grads, state["opt"], self.opt_cfg,
+                    sigma_tree)
+            return {"params": params, "opt": opt}, dict(metrics, **opt_metrics)
+        return step
+
+    def _make_compressed_step(self):
+        """The whole step runs manual-over-DP: grads are computed *per data
+        shard* (never full-gradient-synced), PowerSGD factors are the only
+        cross-DP traffic, error feedback stays worker-local.  The model axis
+        remains automatic (TP sharding untouched)."""
+        mesh = self.mesh
+        assert mesh is not None and self.rules is not None
+        dp = tuple(a for a in self.dp_axes if a in mesh.shape)
+        # inside the manual region the batch dim is already per-shard: strip
+        # the "batch" rule so act_shard doesn't reference manual axes
+        inner_rules = dataclasses.replace(
+            self.rules, rules=tuple((k, None if k == "batch" else v)
+                                    for k, v in self.rules.rules))
+
+        def local_step(state, batch):
+            with use_rules(inner_rules):
+                loss, metrics, grads = self._grads(state["params"], batch)
+                grads, new_comp, stats = comp.compress_and_sync(
+                    grads, state["comp"], cfg=self.compression, axis_names=dp)
+                params, opt, opt_metrics = optim.adamw_update(
+                    state["params"], grads, state["opt"], self.opt_cfg, None)
+            metrics = dict(metrics, **opt_metrics, **stats)
+            metrics = jax.tree_util.tree_map(
+                lambda m: jax.lax.pmean(m, dp), metrics)
+            return {"params": params, "opt": opt, "comp": new_comp}, metrics
+
+        def state_specs(state):
+            def one_comp(path, leaf):
+                last = str(path[-1].key) if path else ""
+                return P(dp) if last == "err" else P()
+            return {
+                "params": jax.tree_util.tree_map(lambda _: P(), state["params"]),
+                "opt": jax.tree_util.tree_map(lambda _: P(), state["opt"]),
+                "comp": jax.tree_util.tree_map_with_path(
+                    one_comp, state["comp"], is_leaf=lambda x: x is None),
+            }
+
+        def step(state, batch, sigma_tree=None):
+            sspec = state_specs(state)
+            bspec = jax.tree_util.tree_map(lambda _: P(dp), batch)
+            return jax.shard_map(
+                local_step, mesh=mesh, in_specs=(sspec, bspec),
+                out_specs=(sspec, P()), check_vma=False,
+                axis_names=frozenset(dp))(state, batch)
+        return step
+
+    def jit_train_step(self, suite=None, state=None, *, with_sigma=False):
+        step = self.make_train_step()
+        if not with_sigma:
+            inner = step
+            step = lambda state, batch: inner(state, batch, None)
+        if self.mesh is None or self.rules is None:
+            return jax.jit(step)
+        st_sh = self.state_shardings(state)
+        b_sh = self.batch_shardings(suite) if suite is not None else None
+        in_sh = (st_sh, b_sh, None) if with_sigma else (st_sh, b_sh)
+        return jax.jit(step, in_shardings=in_sh,
+                       out_shardings=(st_sh, None), donate_argnums=(0,))

@@ -1,0 +1,39 @@
+"""Shared pytest config.
+
+x64 is enabled for oracle-grade numerics (model code always passes explicit
+dtypes, so this does not change model behaviour).  XLA device-count flags are
+deliberately NOT set here — smoke tests and benches must see 1 device; the
+multi-pod dry-run sets its own flags in a fresh process (launch/dryrun.py).
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+
+def run_in_subprocess(code: str, *, devices: int = 0, timeout: int = 900,
+                      env_extra: dict | None = None) -> subprocess.CompletedProcess:
+    """Run a python snippet in a fresh interpreter (for XLA flag isolation)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    if devices:
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    if env_extra:
+        env.update(env_extra)
+    return subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=timeout, env=env)
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_in_subprocess

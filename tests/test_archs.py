@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward + one
+gradient step, output shapes + finiteness; decode-vs-prefill consistency;
+MoE routing invariants."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import list_configs, smoke_of, get_config
+from repro.configs.shapes import SUITES, cells
+from repro.models import build
+
+ARCHS = list_configs()
+
+
+def make_batch(cfg, b, s, rng):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+             "mask": jnp.ones((b, s), jnp.float32)}
+    if cfg.kind == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, cfg.enc_seq, cfg.d_model)), jnp.float32)
+    if cfg.n_img_tokens:
+        batch["images"] = jnp.asarray(
+            rng.standard_normal((b, cfg.n_img_tokens, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_grad(arch):
+    cfg = smoke_of(arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    b, s = 2, 16
+    batch = make_batch(cfg, b, s, rng)
+    logits, aux = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (b, s, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss, metrics = model.loss_fn(params, batch)
+    assert np.isfinite(float(loss))
+    grads = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat)
+    gnorm = float(jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in flat)))
+    assert gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_prefill(arch):
+    cfg = smoke_of(arch)
+    if cfg.n_experts:   # capacity drops are prefill-only; disable for parity
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    b, s = 2, 8
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    batch = {"tokens": toks}
+    if cfg.kind == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, cfg.enc_seq, cfg.d_model)), jnp.float32)
+    full, _ = model.forward(params, batch)
+    caches = model.init_caches(b, s)
+    if cfg.kind == "encdec":
+        from repro.models.encdec import fill_cross_cache
+        caches = fill_cross_cache(params, cfg, batch["frames"], caches)
+    step = jax.jit(model.decode_step)
+    for t in range(s):
+        logits, caches = step(params, toks[:, t : t + 1], caches, t)
+        err = float(jnp.max(jnp.abs(logits[:, 0] - full[:, t])))
+        assert err < 2e-3, (arch, t, err)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_dims(arch):
+    """The registered full configs carry the exact assigned dimensions."""
+    cfg = get_config(arch)
+    assert cfg.d_model > 0 and cfg.n_layers > 0 and cfg.vocab > 0
+    suite_names = {s.name for s in cells(cfg)}
+    if cfg.subquadratic:
+        assert "long_500k" in suite_names
+    else:
+        assert "long_500k" not in suite_names
+    assert {"train_4k", "prefill_32k", "decode_32k"} <= suite_names
+
+
+EXPECTED = {
+    "llama3-8b": dict(n_layers=32, d_model=4096, n_heads=32, n_kv=8,
+                      d_ff=14336, vocab=128256),
+    "granite-3-2b": dict(n_layers=40, d_model=2048, n_heads=32, n_kv=8,
+                         d_ff=8192, vocab=49155),
+    "codeqwen1.5-7b": dict(n_layers=32, d_model=4096, n_heads=32, n_kv=32,
+                           d_ff=13440, vocab=92416),
+    "phi3-medium-14b": dict(n_layers=40, d_model=5120, n_heads=40, n_kv=10,
+                            d_ff=17920, vocab=100352),
+    "granite-moe-3b-a800m": dict(n_layers=32, d_model=1536, n_heads=24,
+                                 n_kv=8, d_ff=512, vocab=49155, n_experts=40,
+                                 top_k=8),
+    "deepseek-moe-16b": dict(n_layers=28, d_model=2048, n_heads=16, n_kv=16,
+                             d_ff=1408, vocab=102400, n_experts=64, top_k=6,
+                             n_shared_experts=2),
+    "hymba-1.5b": dict(n_layers=32, d_model=1600, n_heads=25, n_kv=5,
+                       d_ff=5504, vocab=32001, ssm_state=16),
+    "pixtral-12b": dict(n_layers=40, d_model=5120, n_heads=32, n_kv=8,
+                        d_ff=14336, vocab=131072),
+    "rwkv6-1.6b": dict(n_layers=24, d_model=2048, d_ff=7168, vocab=65536),
+    "whisper-medium": dict(n_layers=24, d_model=1024, n_heads=16, n_kv=16,
+                           d_ff=4096, vocab=51865),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_assigned_dims_exact(arch):
+    cfg = get_config(arch)
+    for k, v in EXPECTED[arch].items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_moe_routing_invariants():
+    from repro.models.moe import _route_one
+    rng = np.random.default_rng(2)
+    s, k, e, cap = 32, 2, 8, 10
+    gi = jnp.asarray(rng.integers(0, e, (s, k)), jnp.int32)
+    gv = jnp.asarray(rng.random((s, k)), jnp.float32)
+    tok, w, valid = _route_one(None, gi, gv, e=e, cap=cap)
+    assert tok.shape == (e, cap) and valid.shape == (e, cap)
+    # every valid slot's token really routed to that expert
+    gi_np, tok_np, valid_np = map(np.asarray, (gi, tok, valid))
+    for ei in range(e):
+        for c in range(cap):
+            if valid_np[ei, c]:
+                assert ei in gi_np[tok_np[ei, c]]
+    # no expert over capacity, total kept slots <= s*k
+    assert valid_np.sum() <= s * k

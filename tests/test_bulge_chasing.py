@@ -1,0 +1,169 @@
+"""System tests for the paper's stage-2: wavefront bulge chasing.
+
+The key invariants (hypothesis property tests + fixed cases):
+  1. packed wavefront result == sequential dense oracle (element-exact
+     modulo fp ordering — tight tolerance);
+  2. singular values invariant under the whole reduction;
+  3. bandwidth actually shrinks stage by stage, bulge space drains to zero;
+  4. the 3-cycle wavefront schedule itself: concurrent windows are disjoint.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import band as bandmod
+from repro.core import bulge_chasing as bc
+
+
+def banded_random(n, bw, seed):
+    rng = np.random.default_rng(seed)
+    a = np.triu(rng.standard_normal((n, n)))
+    return np.triu(a) - np.triu(a, bw + 1)
+
+
+# ---------------------------------------------------------------------------
+# wavefront == oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(12, 56), st.integers(2, 10), st.integers(1, 6),
+       st.integers(0, 2**31 - 1))
+def test_stage_matches_sequential_oracle(n, bw, tw, seed):
+    bw = min(bw, n - 2)
+    tw = min(tw, bw - 1) if bw > 1 else 1
+    if bw <= 1:
+        return
+    a = banded_random(n, bw, seed)
+    ref = bc.reduce_stage_dense_ref(a, bw, tw)
+    packed = bandmod.pack(jnp.asarray(a), bw, tw)
+    out = bc.reduce_stage_packed(packed, n=n, b_in=bw, tw=tw, backend="ref")
+    dense = np.asarray(bandmod.unpack(out, bw, tw, n))
+    np.testing.assert_allclose(dense, ref, atol=1e-11 * max(1.0, np.abs(ref).max()))
+
+
+@pytest.mark.parametrize("n,bw,tw", [(24, 5, 2), (48, 4, 3), (33, 7, 6),
+                                     (64, 12, 4), (20, 2, 1), (57, 9, 4)])
+def test_stage_fixed_cases(n, bw, tw):
+    a = banded_random(n, bw, seed=n * 100 + bw)
+    ref = bc.reduce_stage_dense_ref(a, bw, tw)
+    packed = bandmod.pack(jnp.asarray(a), bw, tw)
+    out = bc.reduce_stage_packed(packed, n=n, b_in=bw, tw=tw, backend="ref")
+    dense = np.asarray(bandmod.unpack(out, bw, tw, n))
+    np.testing.assert_allclose(dense, ref, atol=1e-11)
+    # bandwidth reduced, bulge space drained
+    assert int(bandmod.bandwidth_of(jnp.asarray(dense), tol=1e-10)) <= bw - tw
+    assert np.abs(np.tril(dense, -1)).max() < 1e-10
+
+
+# ---------------------------------------------------------------------------
+# full reduction: singular values preserved
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(16, 48), st.integers(2, 12), st.integers(1, 8),
+       st.integers(0, 2**31 - 1))
+def test_full_reduction_preserves_sigma(n, bw, tw, seed):
+    bw = min(bw, n - 2)
+    if bw < 1:
+        return
+    a = banded_random(n, bw, seed)
+    d, e = bc.bidiagonalize(jnp.asarray(a), bw=bw, tw=tw, backend="ref")
+    B = np.diag(np.asarray(d)) + np.diag(np.asarray(e)[1:], 1)
+    s0 = np.linalg.svd(a, compute_uv=False)
+    s1 = np.linalg.svd(B, compute_uv=False)
+    np.testing.assert_allclose(s1, s0, atol=1e-10 * max(1.0, s0[0]))
+
+
+def test_full_matches_dense_oracle_bidiagonal():
+    n, bw, tw = 40, 6, 2
+    a = banded_random(n, bw, 7)
+    d, e = bc.bidiagonalize(jnp.asarray(a), bw=bw, tw=tw, backend="ref")
+    dref, eref, _ = bc.bidiagonalize_dense_ref(a, bw, tw)
+    np.testing.assert_allclose(np.asarray(d), dref, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(e)[1:], eref, atol=1e-10)
+
+
+def test_already_bidiagonal_passthrough():
+    n = 16
+    a = np.diag(np.arange(1.0, n + 1)) + np.diag(np.ones(n - 1), 1)
+    d, e = bc.bidiagonalize(jnp.asarray(a), bw=1, tw=4, backend="ref")
+    np.testing.assert_allclose(np.asarray(d), np.arange(1.0, n + 1))
+    np.testing.assert_allclose(np.asarray(e)[1:], np.ones(n - 1))
+
+
+# ---------------------------------------------------------------------------
+# schedule properties (paper §III-A dependency analysis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(8, 200), st.integers(2, 32), st.integers(1, 16))
+def test_wavefront_windows_disjoint(n, b_in, tw):
+    tw = min(tw, b_in - 1)
+    if tw < 1:
+        return
+    nsweeps, total, G = bc.stage_schedule(n, b_in, tw)
+    if nsweeps == 0:
+        return
+    W = b_in + tw + 1
+    g = np.arange(G)
+    for t in range(0, total, max(1, total // 17)):
+        _, _, p, active, _ = bc.chase_cycle_indices(t, g, n, b_in, tw)
+        ps = np.sort(np.asarray(p)[np.asarray(active)])
+        if len(ps) > 1:
+            assert (np.diff(ps) >= W).all(), (t, ps, W)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(8, 120), st.integers(2, 16), st.integers(1, 8))
+def test_every_sweep_cycle_is_scheduled_once(n, b_in, tw):
+    tw = min(tw, b_in - 1)
+    if tw < 1:
+        return
+    nsweeps, total, G = bc.stage_schedule(n, b_in, tw)
+    seen = set()
+    g = np.arange(G)
+    for t in range(total):
+        R, j, p, active, _ = bc.chase_cycle_indices(t, g, n, b_in, tw)
+        for Rv, jv, av in zip(np.asarray(R), np.asarray(j), np.asarray(active)):
+            if av:
+                key = (int(Rv), int(jv))
+                assert key not in seen
+                seen.add(key)
+    # every (sweep, cycle) pair with a valid pivot must have been scheduled
+    b_out = b_in - tw
+    expected = {(R, j) for R in range(nsweeps)
+                for j in range((n - 1 - R - b_out) // b_in + 1)}
+    assert expected <= seen
+
+
+def test_tw_schedule_reaches_bidiagonal():
+    assert bc.tw_schedule(6, 2) == [(6, 2), (4, 2), (2, 1)]
+    assert bc.tw_schedule(128, 32) == [(128, 32), (96, 32), (64, 32), (32, 31)]
+    assert bc.tw_schedule(1, 32) == []
+    for bw in range(2, 70):
+        plan = bc.tw_schedule(bw, 8)
+        assert plan[0][0] == bw
+        left = bw - sum(tw for _, tw in plan)
+        assert left == 1
+
+
+def test_vector_accumulation_uv():
+    """Beyond-paper (paper §VII future work): accumulate U, V during the
+    chase so that U^T A V == B (bidiagonal), U/V orthogonal."""
+    n, bw, tw = 36, 6, 2
+    a = banded_random(n, bw, 13)
+    d, e, u, v = bc.bidiagonalize_dense_ref_uv(a, bw, tw)
+    B = u.T @ a @ v
+    np.testing.assert_allclose(np.diag(B), d, atol=1e-11)
+    np.testing.assert_allclose(np.diag(B, 1), e, atol=1e-11)
+    off = B - np.diag(np.diag(B)) - np.diag(np.diag(B, 1), 1)
+    assert np.abs(off).max() < 1e-11
+    np.testing.assert_allclose(u.T @ u, np.eye(n), atol=1e-12)
+    np.testing.assert_allclose(v.T @ v, np.eye(n), atol=1e-12)
+    # and the bidiagonal carries the right singular values
+    s0 = np.linalg.svd(a, compute_uv=False)
+    s1 = np.linalg.svd(np.diag(d) + np.diag(e, 1), compute_uv=False)
+    np.testing.assert_allclose(s1, s0, atol=1e-11 * s0[0])
