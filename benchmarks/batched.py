@@ -1,0 +1,75 @@
+"""Batched vs looped SVD throughput (the batch-native tentpole's payoff).
+
+For small matrices a single chase wavefront cannot fill the machine (paper
+Eq. 1: full utilization needs n / (3*CBW) >= execution units); batching B
+independent problems multiplies the wavefront width with the SAME number of
+global cycles.  This sweep measures matrices/second of
+
+  * ``looped``  — per-matrix ``banded_singular_values`` calls in a host loop;
+  * ``batched`` — one ``(B, n, n)`` batch-native pipeline call;
+
+for B in BATCH_SIZES, reporting the speedup in the derived column.
+
+  PYTHONPATH=src python -m benchmarks.run --only batched
+  PYTHONPATH=src python benchmarks/batched.py
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+if __package__ in (None, ""):                 # direct script execution
+    _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _REPO)
+    sys.path.insert(0, os.path.join(_REPO, "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import banded, row, timeit
+
+BATCH_SIZES = (1, 4, 16)
+SHAPES = ((96, 8), (128, 16))                     # (n, bw): Eq.-1-starved sizes
+TW = 4
+
+
+def run():
+    from repro.core import svd as svdmod
+    from repro.core.tuning import PipelineConfig, default_bucket_batch
+
+    out = []
+    for n, bw in SHAPES:
+        cfg = PipelineConfig.resolve(bw=bw, tw=TW, backend="ref",
+                                     dtype=np.float64, n=n)
+        out.append(row(f"batched/bucket_hint/n{n}/bw{bw}",
+                       0.0, f"default_bucket_batch={default_bucket_batch(n, bw)}"))
+        for B in BATCH_SIZES:
+            mats = jnp.asarray(np.stack([banded(n, bw, seed=s)
+                                         for s in range(B)]))
+
+            def looped(ms=mats):
+                return [svdmod.banded_singular_values(ms[b], bw=bw, config=cfg)
+                        for b in range(ms.shape[0])]
+
+            def batched(ms=mats):
+                return svdmod.banded_singular_values(ms, bw=bw, config=cfg)
+
+            t_loop = timeit(looped)
+            t_batch = timeit(batched)
+            speedup = t_loop / t_batch
+            out.append(row(f"batched/looped/n{n}/bw{bw}/B{B}",
+                           t_loop * 1e6, f"mats_per_s={B / t_loop:.2f}"))
+            out.append(row(f"batched/batched/n{n}/bw{bw}/B{B}",
+                           t_batch * 1e6,
+                           f"mats_per_s={B / t_batch:.2f};speedup={speedup:.2f}x"))
+    return out
+
+
+if __name__ == "__main__":
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    print("name,us_per_call,derived")
+    for line in run():
+        print(line, flush=True)

@@ -21,7 +21,7 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 SUITES = ["accuracy", "hyperparams", "occupancy", "scaling", "precision",
-          "kernels_bench"]
+          "kernels_bench", "batched"]
 
 
 def main() -> None:

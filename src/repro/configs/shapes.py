@@ -6,7 +6,7 @@
   long_500k    seq 524288 gb 1     -> serve_step; sub-quadratic archs only
 
 ``cells(arch)`` enumerates the applicable (arch x shape) dry-run cells —
-full-attention archs skip long_500k (quadratic; DESIGN.md §5); whisper's
+full-attention archs skip long_500k (quadratic; DESIGN.md §7); whisper's
 decoder is its sequence axis (enc frames fixed at cfg.enc_seq).
 """
 

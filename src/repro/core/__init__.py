@@ -9,5 +9,11 @@ from repro.core.bulge_chasing import (
 )
 from repro.core.stage1 import band_reduce
 from repro.core.bidiag_svd import bidiag_singular_values
-from repro.core.svd import singular_values, banded_singular_values, bidiagonal_of
-from repro.core.tuning import ChaseConfig, default_tilewidth, occupancy_matrix_size
+from repro.core.svd import (
+    singular_values, banded_singular_values, bidiagonal_of,
+    batched_singular_values, svd_batched,
+)
+from repro.core.tuning import (
+    ChaseConfig, PipelineConfig, default_tilewidth, occupancy_matrix_size,
+    stage_plan,
+)

@@ -1,4 +1,4 @@
-"""Packed banded storage (paper §IV-b).
+"""Packed banded storage (paper §IV-b), batch-native.
 
 The matrix entering stage 2 is upper-triangular banded: ``A[i, j] != 0`` only for
 ``0 <= j - i <= bw``.  During bulge chasing with inner tilewidth ``tw`` fill-in is
@@ -11,7 +11,11 @@ bandwidth, increased by twice the inner tilewidth", column-major):
 Row ``tw`` is the main diagonal; rows above it (d < tw) are subdiagonals (bulge
 space); rows below it are superdiagonals (band + overhang bulge space).
 
-All functions are shape-static and jit-friendly.
+All functions are shape-static, jit-friendly, and polymorphic over leading
+batch axes: a dense ``(..., n, n)`` input packs to ``(..., band_height, n)``
+and every helper below indexes the trailing two axes only, so a batch of B
+independent problems is one array ``(B, H, n)`` — the layout the batched
+wavefront stage gathers its ``(B, G, H, W)`` windows from.
 """
 
 from __future__ import annotations
@@ -36,51 +40,55 @@ def band_height(bw: int, tw: int) -> int:
 
 
 def pack(a: jax.Array, bw: int, tw: int) -> jax.Array:
-    """Dense (n, n) -> packed band (band_height, n).
+    """Dense (..., n, n) -> packed band (..., band_height, n).
 
     Entries outside ``-tw <= j - i <= bw + tw`` are dropped (they must be zero for
     a well-formed banded input; `unpack(pack(a))` round-trips banded matrices).
     """
-    n = a.shape[0]
+    n = a.shape[-1]
     h = band_height(bw, tw)
     d = jnp.arange(h)[:, None]          # storage diagonal index
     j = jnp.arange(n)[None, :]          # column
     i = j - (d - tw)                    # source row
     valid = (i >= 0) & (i < n)
-    return jnp.where(valid, a[jnp.clip(i, 0, n - 1), j], 0).astype(a.dtype)
+    return jnp.where(valid, a[..., jnp.clip(i, 0, n - 1), j], 0).astype(a.dtype)
 
 
 def unpack(band: jax.Array, bw: int, tw: int, n: int) -> jax.Array:
-    """Packed band (band_height, >=n) -> dense (n, n)."""
+    """Packed band (..., band_height, >=n) -> dense (..., n, n)."""
     h = band_height(bw, tw)
+    ncols = band.shape[-1]
     i = jnp.arange(n)[:, None]
     j = jnp.arange(n)[None, :]
     d = tw + (j - i)
     valid = (d >= 0) & (d < h)
-    return jnp.where(valid, band[jnp.clip(d, 0, h - 1), jnp.clip(j, 0, band.shape[1] - 1)], 0)
+    vals = band[..., jnp.clip(d, 0, h - 1), jnp.clip(j, 0, ncols - 1)]
+    return jnp.where(valid, vals, 0)
 
 
 def bandwidth_of(a: jax.Array, tol: float = 0.0) -> jax.Array:
-    """Max |j - i| with |A[i,j]| > tol above the diagonal (upper bandwidth)."""
-    n = a.shape[0]
+    """Max |j - i| with |A[i,j]| > tol above the diagonal (upper bandwidth);
+    reduces the trailing two axes (batched input -> per-matrix widths)."""
+    n = a.shape[-1]
     i = jnp.arange(n)[:, None]
     j = jnp.arange(n)[None, :]
     nz = jnp.abs(a) > tol
-    return jnp.max(jnp.where(nz, j - i, 0))
+    return jnp.max(jnp.where(nz, j - i, 0), axis=(-2, -1))
 
 
 def band_extract_diag(band: jax.Array, tw: int, k: int, n: int) -> jax.Array:
-    """Return diagonal k (k=0 main, k=1 first super) as a length-n vector
+    """Return diagonal k (k=0 main, k=1 first super) as a (..., n) vector
     (entries beyond the matrix edge are zero)."""
-    row = band[tw + k, :n]
+    row = band[..., tw + k, :n]
     j = jnp.arange(n)
     return jnp.where(j - k >= 0, row, 0)
 
 
 def band_set_diag(band: jax.Array, tw: int, k: int, vals: jax.Array) -> jax.Array:
-    return band.at[tw + k, : vals.shape[0]].set(vals)
+    return band.at[..., tw + k, : vals.shape[-1]].set(vals)
 
 
 def pad_columns(band: jax.Array, pad: int) -> jax.Array:
     """Zero-pad columns on the right so chase windows never clamp at the edge."""
-    return jnp.pad(band, ((0, 0), (0, pad)))
+    widths = [(0, 0)] * (band.ndim - 1) + [(0, pad)]
+    return jnp.pad(band, widths)

@@ -63,8 +63,16 @@ def bidiag_singular_values(d: jax.Array, e: jax.Array, *, max_iter: int = 0) -> 
     """All singular values of the bidiagonal (d, e), descending.
 
     e[0] is ignored (convention: e[i] = B[i-1, i]).  Bisection on [0, bound]
-    where bound = ||T_GK||_inf via Gershgorin.
+    where bound = ||T_GK||_inf via Gershgorin.  Accepts stacked bidiagonals
+    ``(..., n)`` — bisection is embarrassingly parallel across both singular
+    values and batch, so the batch axes simply vmap.
     """
+    if d.ndim > 1:
+        lead = d.shape[:-1]
+        fn = jax.vmap(lambda dd, ee: bidiag_singular_values(dd, ee,
+                                                            max_iter=max_iter))
+        out = fn(d.reshape((-1, d.shape[-1])), e.reshape((-1, e.shape[-1])))
+        return out.reshape(lead + (d.shape[-1],))
     n = d.shape[0]
     acc = jnp.float32 if d.dtype in (jnp.bfloat16, jnp.float16) else d.dtype
     z = gk_offdiag(d.astype(acc), e.astype(acc))

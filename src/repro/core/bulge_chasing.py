@@ -28,6 +28,16 @@ The window of one cycle covers matrix rows [p - b_in - tw, p + tw] and columns
 [p, p + b_in + tw] — "1 + BW + TW consecutive elements" (paper §III-A) — and is
 *rolled* so matrix rows align with window rows (dense tile), turning the
 band-storage diagonal access pattern into contiguous VPU-friendly tiles.
+
+Batch-native execution (DESIGN.md §4): every entry point below accepts a
+leading batch axis — packed storage ``(B, H, ncols)``, dense input
+``(B, n, n)``.  The schedule is shape-only, so all B problems share one
+wavefront clock: per global cycle the gather produces ``(B, G, H, W)``
+windows, flattened to one fused kernel call over ``B*G`` slots (grid
+``(B·G,)``), and scattered back race-free.  This is how small matrices —
+whose own wavefront ``G = ceil(n / (3*b_in - 1)) + 1`` cannot fill the
+machine (paper Eq. 1) — recover occupancy: independent problems fill the
+idle wavefront slots.
 """
 
 from __future__ import annotations
@@ -163,15 +173,20 @@ def bidiagonalize_dense_ref_uv(a: np.ndarray, bw: int, tw: int):
 # ---------------------------------------------------------------------------
 
 def stage_schedule(n: int, b_in: int, tw: int) -> tuple[int, int, int]:
-    """(n_sweeps, total_cycles, max_concurrent) for one stage."""
+    """(n_sweeps, total_cycles, max_concurrent) for one stage.
+
+    ``max_concurrent`` is ``tuning.max_concurrent_sweeps`` (single source of
+    truth for the wavefront width), including for the degenerate 0-sweep case.
+    """
+    from repro.core import tuning
+    conc = tuning.max_concurrent_sweeps(n, b_in)
     b_out = b_in - tw
     nsweeps = max(n - 1 - b_out, 0)
     if nsweeps == 0:
-        return 0, 0, 1
+        return 0, 0, conc
     last = nsweeps - 1
     max_j_last = max((n - 1 - last - b_out) // b_in, 0)
     total = 3 * last + max_j_last + 1
-    conc = max(1, -(-n // (3 * b_in - 1)) + 1)
     return nsweeps, total, conc
 
 
@@ -194,29 +209,46 @@ def chase_cycle_indices(t, g, n: int, b_in: int, tw: int):
 # Packed wavefront stage (JAX)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("n", "b_in", "tw", "backend", "unroll"))
+@functools.partial(jax.jit, static_argnames=("n", "b_in", "tw", "backend",
+                                             "unroll", "config"))
 def reduce_stage_packed(band: jax.Array, *, n: int, b_in: int, tw: int,
-                        backend: str = "auto", unroll: int = 1) -> jax.Array:
-    """One SBR stage on packed band storage.
+                        backend: str = "auto", unroll: int | None = None,
+                        config=None) -> jax.Array:
+    """One SBR stage on packed band storage, batch-native.
 
-    band: (b_in + 2*tw + 1, >= n).  Returns same-shape storage with bandwidth
-    reduced to ``b_in - tw`` (bulge space zeroed).
+    band: (..., b_in + 2*tw + 1, >= n) — any leading batch axes (flattened to
+    one B internally).  Returns same-shape storage with bandwidth reduced to
+    ``b_in - tw`` (bulge space zeroed).  All B problems advance on one
+    wavefront clock: per global cycle the (B, G, H, W) window gather is
+    flattened into ONE fused kernel call over B*G slots, so independent
+    problems fill wavefront slots a single small matrix leaves idle.
+
+    Explicit ``backend=``/``unroll=`` kwargs win over ``config``; the config
+    fills whatever was left at its default ("auto" / None).  Backend/interpret
+    resolution itself is delegated to the kernel registry (ops._resolve) at
+    the ``chase_cycle`` call — this function only resolves ``unroll``.
     """
     from repro.kernels import ops  # local import to avoid cycles
+
+    if unroll is None:
+        unroll = config.unroll if config is not None else 1
 
     b_out = b_in - tw
     assert b_out >= 1, (b_in, tw)
     H = b_in + 2 * tw + 1
     W = b_in + tw + 1
-    assert band.shape[0] == H, (band.shape, H)
+    assert band.ndim >= 2 and band.shape[-2] == H, (band.shape, H)
+    lead = band.shape[:-2]
+    band3 = band.reshape((-1,) + band.shape[-2:])
+    B = band3.shape[0]
     nsweeps, T, G = stage_schedule(n, b_in, tw)
     if nsweeps == 0 or T == 0:
         return band
 
-    ncols0 = band.shape[1]
+    ncols0 = band3.shape[-1]
     dump = n + W                      # start of per-slot dump zones (inactive slots)
     n_pad = dump + G * W
-    bandp = bandmod.pad_columns(band, max(n_pad - ncols0, 0))
+    bandp = bandmod.pad_columns(band3, max(n_pad - ncols0, 0))
 
     yy = jnp.arange(H)[:, None]                      # (H, 1)
     ww = jnp.arange(W)[None, :]                      # (1, W)
@@ -226,43 +258,48 @@ def reduce_stage_packed(band: jax.Array, *, n: int, b_in: int, tw: int,
     y_back = jnp.clip(H - 1 + ww - dd, 0, H - 1)     # (H, W) window row per band cell
     back_valid = dd >= ww
     g_idx = jnp.arange(G)
+    rows = jnp.arange(H)[None, :, None]              # (1, H, 1) band row per cell
 
     def cycle(t, bandp):
         _, _, p, active, is_first = chase_cycle_indices(t, g_idx, n, b_in, tw)
         p_safe = jnp.where(active, p, dump + g_idx * W).astype(jnp.int32)
         cols = p_safe[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]   # (G, W)
-        # gather rolled dense windows: (G, H, W)
-        win = bandp[d_gather[None], cols[:, None, :]]
-        win = jnp.where(gather_valid[None], win, 0)
-        out = ops.chase_cycle(win, is_first, b_in=b_in, tw=tw, backend=backend)
-        out = jnp.where(active[:, None, None], out, win)
-        # shear back to band coords and scatter
-        orig = bandp[jnp.arange(H)[None, :, None], cols[:, None, :]]       # (G, H, W)
-        vals = out[g_idx[:, None, None], y_back[None], ww[None]]
-        vals = jnp.where(back_valid[None], vals, orig)
-        return bandp.at[jnp.arange(H)[None, :, None], cols[:, None, :]].set(vals)
+        # gather rolled dense windows: (B, G, H, W)
+        win = bandp[:, d_gather[None], cols[:, None, :]]
+        win = jnp.where(gather_valid[None, None], win, 0)
+        out = ops.chase_cycle(win.reshape(B * G, H, W), jnp.tile(is_first, B),
+                              b_in=b_in, tw=tw, backend=backend, config=config)
+        out = out.reshape(B, G, H, W)
+        out = jnp.where(active[None, :, None, None], out, win)
+        # shear back to band coords and scatter (windows disjoint per matrix)
+        orig = bandp[:, rows, cols[:, None, :]]                  # (B, G, H, W)
+        vals = out[:, g_idx[:, None, None], y_back[None], ww[None]]
+        vals = jnp.where(back_valid[None, None], vals, orig)
+        return bandp.at[:, rows, cols[:, None, :]].set(vals)
 
     bandp = jax.lax.fori_loop(0, T, cycle, bandp, unroll=unroll)
-    return bandp[:, :ncols0]
+    out = bandp[..., :ncols0]
+    return out.reshape(lead + out.shape[-2:])
 
 
 def tw_schedule(bw: int, tw: int) -> list[tuple[int, int]]:
-    """[(b_in, tw_i), ...] stage plan reducing bw -> 1 by <= tw per stage."""
-    plan = []
-    b = bw
-    while b > 1:
-        twi = min(tw, b - 1)
-        plan.append((b, twi))
-        b -= twi
-    return plan
+    """[(b_in, tw_i), ...] stage plan reducing bw -> 1 by <= tw per stage.
+
+    (Canonical implementation: ``tuning.stage_plan`` — the PipelineConfig's
+    tile-width schedule; kept here as the historical alias.)
+    """
+    from repro.core import tuning
+    return list(tuning.stage_plan(bw, tw))
 
 
 def bidiagonalize_packed(band: jax.Array, *, n: int, bw: int, tw: int,
-                         backend: str = "auto") -> tuple[jax.Array, jax.Array]:
+                         backend: str = "auto",
+                         config=None) -> tuple[jax.Array, jax.Array]:
     """Full SBR bw -> 1 on packed storage. Returns (diag, superdiag).
 
     ``band`` must be packed with tw_0 = min(tw, bw-1) sub rows, i.e. via
-    ``band.pack(a, bw, min(tw, bw-1))``.  Host loop over stages (static,
+    ``band.pack(a, bw, min(tw, bw-1))``; a leading batch axis (B, H, ncols)
+    is threaded through every stage.  Host loop over stages (static,
     <= ceil((bw-1)/tw) iterations); each stage jits once per shape.
 
     Storage layout invariant entering each stage (b_in, tw_i):
@@ -271,31 +308,36 @@ def bidiagonalize_packed(band: jax.Array, *, n: int, bw: int, tw: int,
     """
     plan = tw_schedule(bw, tw)
     if not plan:
-        h = band.shape[0]
+        h = band.shape[-2]
         tw0 = (h - 2) // 2 if h > 2 else 0
         d = bandmod.band_extract_diag(band, tw0, 0, n)
-        e = bandmod.band_extract_diag(band, tw0, 1, n) if bw >= 1 else jnp.zeros(n, band.dtype)
+        e = (bandmod.band_extract_diag(band, tw0, 1, n) if bw >= 1
+             else jnp.zeros(band.shape[:-2] + (n,), band.dtype))
         return d, e
     cur = band
     tw_cur = plan[0][1]
-    assert cur.shape[0] == plan[0][0] + 2 * tw_cur + 1, (cur.shape, plan[0])
+    assert cur.shape[-2] == plan[0][0] + 2 * tw_cur + 1, (cur.shape, plan[0])
     for b_in, twi in plan:
         # re-slice so exactly twi sub rows remain above the diagonal row
         h_i = b_in + 2 * twi + 1
         start = tw_cur - twi
-        if start != 0 or cur.shape[0] != h_i:
-            cur = jax.lax.slice_in_dim(cur, start, start + h_i, axis=0)
-        cur = reduce_stage_packed(cur, n=n, b_in=b_in, tw=twi, backend=backend)
+        if start != 0 or cur.shape[-2] != h_i:
+            cur = jax.lax.slice_in_dim(cur, start, start + h_i, axis=-2)
+        cur = reduce_stage_packed(cur, n=n, b_in=b_in, tw=twi, backend=backend,
+                                  config=config)
         tw_cur = twi
     d = bandmod.band_extract_diag(cur, tw_cur, 0, n)
     e = bandmod.band_extract_diag(cur, tw_cur, 1, n)
     return d, e
 
 
-def bidiagonalize(a: jax.Array, *, bw: int, tw: int, backend: str = "auto"
-                  ) -> tuple[jax.Array, jax.Array]:
-    """Dense upper-banded (n, n) -> (diag, superdiag) via packed wavefront SBR."""
-    n = a.shape[0]
+def bidiagonalize(a: jax.Array, *, bw: int, tw: int, backend: str = "auto",
+                  config=None) -> tuple[jax.Array, jax.Array]:
+    """Dense upper-banded (..., n, n) -> (..., n) diag + superdiag pair via
+    packed wavefront SBR; a leading batch axis runs batch-native (one fused
+    wavefront over all matrices), not as a vmapped loop."""
+    n = a.shape[-1]
     tw0 = min(tw, max(bw - 1, 1))
     packed = bandmod.pack(a, bw, tw0)
-    return bidiagonalize_packed(packed, n=n, bw=bw, tw=tw, backend=backend)
+    return bidiagonalize_packed(packed, n=n, bw=bw, tw=tw, backend=backend,
+                                config=config)

@@ -40,13 +40,16 @@ def square_embed(w: jax.Array, size: int) -> jax.Array:
     return out.at[: w.shape[0], : w.shape[1]].set(w)
 
 
-@functools.partial(jax.jit, static_argnames=("bw", "tw", "backend"))
-def batched_singular_values(mats: jax.Array, *, bw: int = 32,
-                            tw: int | None = None,
-                            backend: str = "auto") -> jax.Array:
-    """vmapped three-stage pipeline: (B, n, n) -> (B, n) descending sigma."""
-    fn = lambda a: svdmod.singular_values(a, bw=bw, tw=tw, backend=backend)
-    return jax.vmap(fn)(mats)
+def batched_singular_values(mats: jax.Array, *, bw: int | None = None,
+                            tw: int | None = None, backend: str = "auto",
+                            config=None) -> jax.Array:
+    """Batch-native three-stage pipeline: (B, n, n) -> (B, n) descending sigma.
+
+    Delegates to ``core.svd.batched_singular_values`` (one fused wavefront
+    over all B chases — the former vmapped-loop formulation is subsumed).
+    """
+    return svdmod.batched_singular_values(mats, bw=bw, tw=tw, backend=backend,
+                                          config=config)
 
 
 def sharded_singular_values(mats: jax.Array, mesh: Mesh, *, bw: int = 32,

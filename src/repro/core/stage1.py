@@ -69,17 +69,33 @@ def wy_t_factor(v: jax.Array, taus: jax.Array) -> jax.Array:
     return jax.lax.fori_loop(0, k, body, jnp.zeros((k, k), v.dtype))
 
 
-@functools.partial(jax.jit, static_argnames=("nb", "backend"))
-def band_reduce(a: jax.Array, *, nb: int, backend: str = "ref") -> jax.Array:
-    """Reduce dense (n, n) to upper-banded form with bandwidth ``nb``.
+@functools.partial(jax.jit, static_argnames=("nb", "backend", "config"))
+def band_reduce(a: jax.Array, *, nb: int, backend: str | None = None,
+                config=None) -> jax.Array:
+    """Reduce dense (..., n, n) to upper-banded form with bandwidth ``nb``.
 
     Singular values are preserved exactly (two-sided orthogonal transforms).
+    Leading batch axes are vmapped (stage 1 is GEMM-bound; the MXU batches
+    naturally — the wavefront trick is only needed for stage 2).
     ``backend="pallas"`` routes the blocked QR trailing update through the
     compact-WY Pallas kernel (kernels/hh_apply.py): the kernel applies at
     full width (already-final panel columns are restored afterwards — regions
     left of the panel hold exact zeros in V's row support, so the apply is a
-    no-op there).
+    no-op there).  An explicit ``backend=`` wins; otherwise a resolved
+    ``config`` supplies it; otherwise "ref".
     """
+    if backend is None:
+        backend = config.backend if config is not None else "ref"
+    if a.ndim > 2:
+        fn = lambda m: _band_reduce_2d(m, nb=nb, backend=backend, config=config)
+        for _ in range(a.ndim - 2):
+            fn = jax.vmap(fn)
+        return fn(a)
+    return _band_reduce_2d(a, nb=nb, backend=backend, config=config)
+
+
+def _band_reduce_2d(a: jax.Array, *, nb: int, backend: str,
+                    config=None) -> jax.Array:
     n = a.shape[0]
     dt = a.dtype
     acc = _acc_dtype(dt)
@@ -113,7 +129,10 @@ def band_reduce(a: jax.Array, *, nb: int, backend: str = "ref") -> jax.Array:
         if backend == "pallas":
             from repro.kernels import ops
             stripe = jax.lax.dynamic_slice(a, (0, c0), (big, nb))
-            a = ops.hh_block_apply(v_blk, t.T, a, backend="pallas")
+            # config threads the resolved interpret flag; the explicit
+            # backend kwarg still selects the kernel route.
+            a = ops.hh_block_apply(v_blk, t.T, a, backend="pallas",
+                                   config=config)
             # restore final panel columns (double-applied by the full-width
             # kernel); columns < c0 are exact-zero in V's row support, so the
             # kernel was a no-op there already.

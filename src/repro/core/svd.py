@@ -1,11 +1,26 @@
-"""Three-stage singular value pipeline (paper §I):
+"""Three-stage singular value pipeline (paper §I), batch-native:
 
   dense --stage1--> banded --stage2 (paper: bulge chasing)--> bidiagonal
         --stage3--> singular values
 
 ``singular_values`` runs all three stages on-device; ``banded_singular_values``
 enters at stage 2 (the paper's direct use case: banded inputs from spectral
-PDE methods etc.).  All functions are jit-friendly and dtype-polymorphic.
+PDE methods etc.).  All functions are jit-friendly, dtype-polymorphic, and
+accept leading batch axes: a stacked ``(B, n, n)`` input runs the whole
+pipeline batch-native — stage 2 merges all B wavefronts into one fused kernel
+call per global cycle (grid ``(B·G,)``), which is how small matrices recover
+the occupancy a single chase cannot reach (paper Eq. 1; DESIGN.md §4).
+``batched_singular_values`` / ``svd_batched`` make the batched contract
+explicit; the serve layer (``serve/engine.py``) buckets traffic onto them.
+
+Configuration: every entry point takes ``config=``, a resolved
+``tuning.PipelineConfig`` that owns the backend (kernel registry key), the
+tile-width schedule, and batch sizing.  The legacy ``bw=/tw=/backend=``
+kwargs remain and are resolved into a config internally; passing a kwarg
+that conflicts with a supplied config raises:
+
+    cfg = PipelineConfig.resolve(bw=16, dtype=jnp.float32)   # once
+    sigma = svd_batched(stacked, config=cfg)                 # everywhere
 """
 
 from __future__ import annotations
@@ -15,34 +30,79 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import band as bandmod
 from repro.core import bulge_chasing as bc
 from repro.core import stage1 as s1
 from repro.core import bidiag_svd as s3
 from repro.core import tuning
 
-__all__ = ["singular_values", "banded_singular_values", "bidiagonal_of"]
+__all__ = ["singular_values", "banded_singular_values", "bidiagonal_of",
+           "batched_singular_values", "svd_batched"]
 
 
-def bidiagonal_of(a: jax.Array, *, bw: int, tw: int | None = None,
-                  backend: str = "auto") -> tuple[jax.Array, jax.Array]:
-    """Stage 2 only: dense upper-banded (n,n) -> (diag, superdiag)."""
-    n = a.shape[0]
-    if tw is None:
-        tw = tuning.default_tilewidth(bw, a.dtype)
-    return bc.bidiagonalize(a, bw=bw, tw=tw, backend=backend)
+def bidiagonal_of(a: jax.Array, *, bw: int | None = None,
+                  tw: int | None = None, backend: str = "auto",
+                  config: tuning.PipelineConfig | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Stage 2 only: dense upper-banded (..., n, n) -> (diag, superdiag)."""
+    cfg = tuning.PipelineConfig.of(config, bw=bw, tw=tw, backend=backend,
+                                   dtype=a.dtype, n=a.shape[-1])
+    return bc.bidiagonalize(a, bw=cfg.bw, tw=cfg.tw, config=cfg)
 
 
-def banded_singular_values(a: jax.Array, *, bw: int, tw: int | None = None,
-                           backend: str = "auto") -> jax.Array:
-    """Singular values of an upper-banded matrix (stages 2+3), descending."""
-    d, e = bidiagonal_of(a, bw=bw, tw=tw, backend=backend)
+def banded_singular_values(a: jax.Array, *, bw: int | None = None,
+                           tw: int | None = None, backend: str = "auto",
+                           config: tuning.PipelineConfig | None = None
+                           ) -> jax.Array:
+    """Singular values of upper-banded (..., n, n) (stages 2+3), descending."""
+    d, e = bidiagonal_of(a, bw=bw, tw=tw, backend=backend, config=config)
     return s3.bidiag_singular_values(d, e)
 
 
-@functools.partial(jax.jit, static_argnames=("bw", "tw", "backend"))
-def singular_values(a: jax.Array, *, bw: int = 32, tw: int | None = None,
-                    backend: str = "auto") -> jax.Array:
-    """All singular values of a dense (n, n) matrix, descending (3 stages)."""
-    banded = s1.band_reduce(a, nb=bw)
-    return banded_singular_values(banded, bw=bw, tw=tw, backend=backend)
+@functools.partial(jax.jit, static_argnames=("config",))
+def _three_stage(a: jax.Array, *, config: tuning.PipelineConfig) -> jax.Array:
+    banded = s1.band_reduce(a, nb=config.bw, config=config)
+    d, e = bc.bidiagonalize(banded, bw=config.bw, tw=config.tw, config=config)
+    return s3.bidiag_singular_values(d, e)
+
+
+def singular_values(a: jax.Array, *, bw: int | None = None,
+                    tw: int | None = None, backend: str = "auto",
+                    config: tuning.PipelineConfig | None = None) -> jax.Array:
+    """All singular values of dense (..., n, n), descending (3 stages).
+
+    ``bw`` defaults to 32 when neither it nor ``config`` is given; passing a
+    legacy kwarg that CONFLICTS with a supplied config raises (no silent
+    precedence).  Config resolution happens outside the jit boundary, and the
+    config's serve-only fields are normalized out of the cache key, so
+    configs differing only in bucket sizing do not recompile.
+    """
+    cfg = tuning.PipelineConfig.of(config, bw=bw, tw=tw, backend=backend,
+                                   dtype=a.dtype, n=a.shape[-1])
+    return _three_stage(a, config=cfg)
+
+
+def batched_singular_values(mats: jax.Array, *, bw: int | None = None,
+                            tw: int | None = None, backend: str = "auto",
+                            config: tuning.PipelineConfig | None = None
+                            ) -> jax.Array:
+    """Batch-native three-stage pipeline: (B, n, n) -> (B, n) descending.
+
+    Unlike a vmapped loop, the B chases share one wavefront: every global
+    cycle issues a single fused kernel call over all B*G windows.  For small
+    n this is the difference between an idle and a saturated chip.
+    """
+    assert mats.ndim == 3, f"expected stacked (B, n, n), got {mats.shape}"
+    return singular_values(mats, bw=bw, tw=tw, backend=backend, config=config)
+
+
+def svd_batched(mats: jax.Array,
+                config: tuning.PipelineConfig | None = None, **overrides
+                ) -> jax.Array:
+    """Config-first batched entry point: ``svd_batched(stacked, cfg)``.
+
+    Sugar over :func:`batched_singular_values` for callers that already hold
+    a resolved :class:`tuning.PipelineConfig` (the serve engine, benchmarks).
+    ``overrides`` are the legacy ``bw=/tw=/backend=`` kwargs (conflicts with
+    the config raise).
+    """
+    return batched_singular_values(mats, config=config, **overrides)

@@ -28,7 +28,8 @@ import jax.numpy as jnp
 
 __all__ = [
     "default_tilewidth", "rows_per_step", "max_concurrent_sweeps",
-    "occupancy_matrix_size", "vmem_working_set_bytes", "ChaseConfig",
+    "occupancy_matrix_size", "vmem_working_set_bytes", "stage_plan",
+    "default_bucket_batch", "ChaseConfig", "PipelineConfig",
 ]
 
 LANE = 128          # TPU vector lane count
@@ -75,6 +76,33 @@ def vmem_working_set_bytes(b_in: int, tw: int, dtype=jnp.float32) -> int:
     return (h * w + 2 * (tw + 1)) * _bytes(dtype)
 
 
+def stage_plan(bw: int, tw: int) -> tuple[tuple[int, int], ...]:
+    """Tile-width schedule: ((b_in, tw_i), ...) reducing bw -> 1, <= tw/stage."""
+    plan = []
+    b = bw
+    while b > 1:
+        twi = min(tw, b - 1)
+        plan.append((b, twi))
+        b -= twi
+    return tuple(plan)
+
+
+def default_bucket_batch(n: int, b_in: int, execution_units: int = 2,
+                         oversub: int = 8) -> int:
+    """Batch size that refills the wavefront when one matrix cannot (Eq. 1).
+
+    A single matrix hosts ``max_concurrent_sweeps(n, b_in)`` concurrent
+    windows; full utilization wants at least one per execution unit (paper
+    Eq. 1), and ``oversub``x that to hide the gather/scatter latency between
+    cycles (the paper's concurrent-blocks headroom).  Independent problems in
+    a batch multiply the wavefront width, so the deficit is made up by
+    batching.  Clamped to [1, 64].
+    """
+    per_matrix = max_concurrent_sweeps(n, b_in)
+    want = execution_units * oversub
+    return max(1, min(64, -(-want // per_matrix)))
+
+
 @dataclasses.dataclass(frozen=True)
 class ChaseConfig:
     """Resolved hyperparameters for one reduction stage."""
@@ -92,3 +120,93 @@ class ChaseConfig:
             rows_per_step=rows_per_step(b_in, tw, dtype),
             max_sweeps=max_concurrent_sweeps(n, b_in),
         )
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    """Fully-resolved configuration for the three-stage pipeline.
+
+    Extends :class:`ChaseConfig` from one reduction stage to the whole
+    pipeline: it owns the concrete kernel backend (resolved once through the
+    registry in ``kernels/ops.py`` — no "auto" strings survive resolution),
+    the tile-width schedule ``bw -> 1``, and the serve-layer batch/bucket
+    sizes.  It is hashable (all-primitive fields), so it can be a static jit
+    argument, and it is the ONE object every layer accepts: ``core/svd.py``,
+    ``core/bulge_chasing.py``, ``core/stage1.py``, ``kernels/ops.py`` and
+    ``serve/engine.py`` all take ``config=`` instead of loose
+    ``backend=``/``tw=`` strings (the legacy kwargs remain as overrides).
+    """
+    bw: int                     # stage-1 output / stage-2 input bandwidth
+    tw: int                     # inner tilewidth (dominant knob, paper Fig. 4)
+    backend: str                # concrete registry key ("ref", "pallas", ...)
+    interpret: bool             # Pallas interpret mode (CPU correctness runs)
+    dtype: str = "float32"      # working precision of stages 1-2
+    max_batch: int = 8          # serve bucket capacity (leading batch axis B)
+    unroll: int = 1             # fori_loop unroll of the wavefront stage
+
+    @property
+    def plan(self) -> tuple[tuple[int, int], ...]:
+        """The tile-width schedule ((b_in, tw_i), ...) down to bidiagonal."""
+        return stage_plan(self.bw, self.tw)
+
+    def kernel(self) -> "PipelineConfig":
+        """Identity for the traced computation: serve-only fields (max_batch)
+        are normalized so configs differing only in bucket sizing share one
+        jit cache entry instead of recompiling the numeric pipeline."""
+        return dataclasses.replace(self, max_batch=0)
+
+    def chase(self, n: int, b_in: int | None = None) -> ChaseConfig:
+        """Per-stage view (the legacy ChaseConfig) for a given problem size."""
+        return ChaseConfig.resolve(n, b_in if b_in is not None else self.bw,
+                                   jnp.dtype(self.dtype), tw=self.tw)
+
+    @classmethod
+    def resolve(cls, *, bw: int = 32, tw: int | None = None,
+                backend: str = "auto", interpret: bool | None = None,
+                dtype=jnp.float32, n: int | None = None,
+                max_batch: int | None = None, unroll: int = 1
+                ) -> "PipelineConfig":
+        """Resolve every knob to a concrete value.
+
+        ``backend="auto"`` and ``interpret=None`` are resolved by the backend
+        registry (pallas on TPU, ref elsewhere; interpret off-TPU only);
+        ``tw=None`` falls back to the cache-line/lane heuristic;
+        ``max_batch=None`` uses the Eq.-1 occupancy deficit for (n, bw).
+        """
+        from repro.kernels import ops  # deferred: registry lives kernels-side
+
+        tw = tw if tw is not None else default_tilewidth(bw, dtype)
+        tw = max(1, min(tw, max(bw - 1, 1)))
+        backend, interpret = ops.resolve_backend(backend, interpret)
+        if max_batch is None:
+            max_batch = default_bucket_batch(n, bw) if n else 8
+        return cls(bw=bw, tw=tw, backend=backend, interpret=interpret,
+                   dtype=jnp.dtype(dtype).name, max_batch=max_batch,
+                   unroll=unroll)
+
+    @classmethod
+    def of(cls, config: "PipelineConfig | None", *, bw: int | None = None,
+           tw: int | None = None, backend: str = "auto", dtype=jnp.float32,
+           n: int | None = None) -> "PipelineConfig":
+        """Adopt an already-resolved config, or resolve the legacy kwargs.
+
+        Passing BOTH a config and a conflicting legacy kwarg (or input dtype)
+        raises — the config is supposed to be the single source of truth, and
+        silently preferring either side would mask the mistake at the call
+        site.  The returned config is ``kernel()``-normalized (it feeds the
+        jit static args of the numeric path).
+        """
+        if config is not None:
+            if bw is not None and bw != config.bw:
+                raise ValueError(f"bw={bw} conflicts with config.bw={config.bw}")
+            if tw is not None and tw != config.tw:
+                raise ValueError(f"tw={tw} conflicts with config.tw={config.tw}")
+            if backend not in ("auto", config.backend):
+                raise ValueError(f"backend={backend!r} conflicts with "
+                                 f"config.backend={config.backend!r}")
+            if dtype is not None and jnp.dtype(dtype).name != config.dtype:
+                raise ValueError(f"input dtype {jnp.dtype(dtype).name} "
+                                 f"conflicts with config.dtype={config.dtype}")
+            return config.kernel()
+        return cls.resolve(bw=bw if bw is not None else 32, tw=tw,
+                           backend=backend, dtype=dtype, n=n).kernel()

@@ -15,6 +15,11 @@ set of the paper, staged HBM -> VMEM by the BlockSpec pipeline (double-
 buffered by Pallas, the TPU analogue of the paper's L1 residency), processed
 entirely in VMEM, and written back.
 
+The kernel is batch-oblivious: a window neither knows nor cares which matrix
+it came from, so the batch-native pipeline (DESIGN.md §4) simply flattens a
+(B, G, H, W) wavefront into grid (B·G,) — independent problems widen the
+wavefront that a single small matrix cannot fill (paper Eq. 1).
+
 The kernel is data-precision-agnostic (fp32/bf16; accumulation in fp32),
 mirroring the paper's precision-agnostic single-source claim.
 """

@@ -1,79 +1,168 @@
-"""jit'd public wrappers for the Pallas kernels, with backend dispatch.
+"""jit'd public wrappers for the Pallas kernels, with registry-based dispatch.
 
-Backends:
+Backends are entries in a small registry (``register_backend``) mapping a name
+to per-op implementations; dispatch is a dict lookup instead of if/elif chains,
+so new backends (future: a Mosaic-GPU port, a cuSOLVER shim) plug in without
+touching call sites.  Built-ins:
+
   "ref"       — pure-jnp oracle (kernels/ref.py), any platform.
   "pallas"    — Pallas TPU kernel; on CPU runs in interpret mode (correctness).
-  "auto"      — pallas on TPU, ref elsewhere (CPU containers validate the
-                kernels separately through the interpret-mode test sweeps).
+
+``resolve_backend`` turns the user-facing "auto" into a concrete registry key
+(pallas on TPU, ref elsewhere) and is the single place platform sniffing
+happens — ``tuning.PipelineConfig.resolve`` calls it so resolved configs never
+carry "auto".  Every wrapper also accepts ``config=`` (a resolved
+``PipelineConfig``) as the preferred way to select a backend.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Callable
 
 import jax
 
 from repro.kernels import ref as _ref
 
-__all__ = ["chase_cycle", "hh_block_apply", "flash_attention"]
+__all__ = ["chase_cycle", "hh_block_apply", "flash_attention",
+           "register_backend", "resolve_backend", "backend_names"]
 
 
 def _platform() -> str:
     return jax.devices()[0].platform
 
 
-@functools.partial(jax.jit, static_argnames=("b_in", "tw", "backend", "interpret"))
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, dict[str, Callable]] = {}
+
+
+def register_backend(name: str, **impls: Callable) -> None:
+    """Register (or extend) a backend: op name -> impl.
+
+    Every impl takes the op's arrays plus its static kwargs and an
+    ``interpret`` kwarg (ignored by non-Pallas backends).
+    """
+    _REGISTRY.setdefault(name, {}).update(impls)
+
+
+def backend_names() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_backend(backend: str = "auto", interpret: bool | None = None
+                    ) -> tuple[str, bool]:
+    """("auto", None) -> a concrete (registry key, interpret flag)."""
+    if backend == "auto":
+        backend = "pallas" if _platform() == "tpu" else "ref"
+    if backend not in _REGISTRY:
+        raise ValueError(
+            f"unknown backend {backend!r}; registered: {backend_names()}")
+    if interpret is None:
+        interpret = _platform() != "tpu"
+    return backend, bool(interpret)
+
+
+def _impl(op: str, backend: str) -> Callable:
+    table = _REGISTRY.get(backend)
+    if table is None or op not in table:
+        raise ValueError(
+            f"backend {backend!r} does not implement {op!r}; "
+            f"registered: {backend_names()}")
+    return table[op]
+
+
+def _resolve(backend: str, interpret: bool | None, config) -> tuple[str, bool]:
+    """Explicit kwargs win; the config fills whatever is still at its
+    "auto"/None default (so a resolved config's interpret flag survives even
+    when the caller passes the concrete backend name alongside it)."""
+    if config is not None:
+        if backend == "auto":
+            backend = config.backend
+        if interpret is None:
+            interpret = config.interpret
+    return resolve_backend(backend, interpret)
+
+
+# ---- built-in "ref" (pure jnp; interpret flag ignored) ---------------------
+
+register_backend(
+    "ref",
+    chase_cycle=lambda windows, is_first, *, b_in, tw, interpret:
+        _ref.chase_cycle_ref(windows, is_first, b_in=b_in, tw=tw),
+    hh_block_apply=lambda v, t, c, *, block_cols, interpret:
+        _ref.hh_block_apply_ref(v, t, c),
+    flash_attention=lambda q, k, v, *, block_q, block_k, interpret:
+        _ref.flash_attention_ref(q, k, v),
+)
+
+
+# ---- built-in "pallas" (lazy kernel imports keep CPU-only paths light) -----
+
+def _pallas_chase(windows, is_first, *, b_in, tw, interpret):
+    from repro.kernels import bulge_chase
+    return bulge_chase.chase_cycle_pallas(windows, is_first, b_in=b_in, tw=tw,
+                                          interpret=interpret)
+
+
+def _pallas_hh(v, t, c, *, block_cols, interpret):
+    from repro.kernels import hh_apply
+    return hh_apply.hh_block_apply_pallas(v, t, c, interpret=interpret,
+                                          block_cols=block_cols)
+
+
+def _pallas_flash(q, k, v, *, block_q, block_k, interpret):
+    from repro.kernels import flash_attention as fa
+    return fa.flash_attention_pallas(q, k, v, block_q=block_q, block_k=block_k,
+                                     interpret=interpret)
+
+
+register_backend("pallas", chase_cycle=_pallas_chase, hh_block_apply=_pallas_hh,
+                 flash_attention=_pallas_flash)
+
+
+# ---------------------------------------------------------------------------
+# Public dispatching wrappers
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("b_in", "tw", "backend", "interpret",
+                                    "config"))
 def chase_cycle(windows: jax.Array, is_first: jax.Array, *, b_in: int, tw: int,
-                backend: str = "auto", interpret: bool | None = None) -> jax.Array:
+                backend: str = "auto", interpret: bool | None = None,
+                config=None) -> jax.Array:
     """Process one wavefront of bulge-chase cycles.
 
     windows: (G, H, W) rolled dense windows (disjoint); is_first: (G,) bool.
+    With a leading batch axis folded in, G = B * G_matrix — independent
+    problems simply widen the wavefront (one fused call either way).
     """
-    if backend == "auto":
-        backend = "pallas" if _platform() == "tpu" else "ref"
-    if backend == "ref":
-        return _ref.chase_cycle_ref(windows, is_first, b_in=b_in, tw=tw)
-    if backend == "pallas":
-        from repro.kernels import bulge_chase
-        if interpret is None:
-            interpret = _platform() != "tpu"
-        return bulge_chase.chase_cycle_pallas(
-            windows, is_first, b_in=b_in, tw=tw, interpret=interpret)
-    raise ValueError(f"unknown backend {backend!r}")
-
-
-@functools.partial(jax.jit, static_argnames=("backend", "interpret", "block_cols"))
-def hh_block_apply(v: jax.Array, t: jax.Array, c: jax.Array, *,
-                   backend: str = "auto", interpret: bool | None = None,
-                   block_cols: int = 512) -> jax.Array:
-    """C <- (I - V T V^T) C — stage-1 WY blocked reflector apply."""
-    if backend == "auto":
-        backend = "pallas" if _platform() == "tpu" else "ref"
-    if backend == "ref":
-        return _ref.hh_block_apply_ref(v, t, c)
-    if backend == "pallas":
-        from repro.kernels import hh_apply
-        if interpret is None:
-            interpret = _platform() != "tpu"
-        return hh_apply.hh_block_apply_pallas(v, t, c, interpret=interpret,
-                                              block_cols=block_cols)
-    raise ValueError(f"unknown backend {backend!r}")
+    backend, interpret = _resolve(backend, interpret, config)
+    return _impl("chase_cycle", backend)(windows, is_first, b_in=b_in, tw=tw,
+                                         interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "interpret",
-                                             "block_q", "block_k"))
+                                             "block_cols", "config"))
+def hh_block_apply(v: jax.Array, t: jax.Array, c: jax.Array, *,
+                   backend: str = "auto", interpret: bool | None = None,
+                   block_cols: int = 512, config=None) -> jax.Array:
+    """C <- (I - V T V^T) C — stage-1 WY blocked reflector apply."""
+    backend, interpret = _resolve(backend, interpret, config)
+    return _impl("hh_block_apply", backend)(v, t, c, block_cols=block_cols,
+                                            interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "interpret",
+                                             "block_q", "block_k", "config"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     backend: str = "auto", interpret: bool | None = None,
-                    block_q: int = 128, block_k: int = 128) -> jax.Array:
+                    block_q: int = 128, block_k: int = 128,
+                    config=None) -> jax.Array:
     """Causal attention (BH, S, D): O(s*d) HBM traffic on TPU (Pallas)."""
-    if backend == "auto":
-        backend = "pallas" if _platform() == "tpu" else "ref"
-    if backend == "ref":
-        return _ref.flash_attention_ref(q, k, v)
-    if backend == "pallas":
-        from repro.kernels import flash_attention as fa
-        if interpret is None:
-            interpret = _platform() != "tpu"
-        return fa.flash_attention_pallas(q, k, v, block_q=block_q,
-                                         block_k=block_k, interpret=interpret)
-    raise ValueError(f"unknown backend {backend!r}")
+    backend, interpret = _resolve(backend, interpret, config)
+    return _impl("flash_attention", backend)(q, k, v, block_q=block_q,
+                                             block_k=block_k,
+                                             interpret=interpret)

@@ -1,6 +1,6 @@
 """RWKV6 ("Finch") block: data-dependent-decay linear recurrence (time-mix)
 plus squared-ReLU channel-mix.  Attention-free — O(1) state per token, so the
-``long_500k`` decode shape runs on this arch (DESIGN.md §5).
+``long_500k`` decode shape runs on this arch (DESIGN.md §7).
 
 Time-mix follows the Finch formulation:
     y_t = r_t . (S_{t-1} + u (x) k_t v_t),   S_t = diag(w_t) S_{t-1} + k_t v_t

@@ -1,2 +1,3 @@
-"""repro.serve — static-shape continuous-batching engine."""
-from repro.serve.engine import Engine, Request, ServeConfig
+"""repro.serve — static-shape continuous-batching engines (tokens + SVD)."""
+from repro.serve.engine import (Engine, Request, ServeConfig,
+                                SVDEngine, SVDRequest)
