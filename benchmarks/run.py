@@ -1,8 +1,13 @@
 """Benchmark harness: one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig6]
+  PYTHONPATH=src python -m benchmarks.run [--only fig6,vectors] [--smoke] [--list]
 
-Prints ``name,us_per_call,derived`` CSV rows.  The roofline tables
+``--only`` takes a comma-separated list of EXACT suite names (``--only
+kernels_bench`` no longer also pulls in every suite containing the
+substring); ``--list`` prints the registered suites; ``--smoke`` runs tiny
+shapes — suites that support it are called with ``run(smoke=True)``, the
+rest are skipped with a comment row (used as the non-blocking CI perf
+probe).  Prints ``name,us_per_call,derived`` CSV rows.  The roofline tables
 (EXPERIMENTS.md §Roofline) come from the dry-run artifacts instead:
 ``python -m repro.roofline.report`` after ``python -m repro.launch.dryrun``.
 """
@@ -10,6 +15,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  The roofline tables
 from __future__ import annotations
 
 import argparse
+import inspect
 import os
 import sys
 import time
@@ -21,20 +27,45 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 SUITES = ["accuracy", "hyperparams", "occupancy", "scaling", "precision",
-          "kernels_bench", "batched"]
+          "kernels_bench", "batched", "vectors"]
 
 
-def main() -> None:
+def _supports_smoke(fn) -> bool:
+    try:
+        return "smoke" in inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+
+
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="")
-    args = ap.parse_args()
+    ap.add_argument("--only", default="",
+                    help="comma-separated exact suite names (see --list)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes; suites without a smoke mode are skipped")
+    ap.add_argument("--list", action="store_true", dest="list_suites",
+                    help="print registered suite names and exit")
+    args = ap.parse_args(argv)
+    if args.list_suites:
+        for name in SUITES:
+            print(name)
+        return
+    selected = SUITES
+    if args.only:
+        wanted = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = sorted(set(wanted) - set(SUITES))
+        if unknown:
+            ap.error(f"unknown suite(s) {unknown}; registered: {SUITES}")
+        selected = [s for s in SUITES if s in wanted]
     print("name,us_per_call,derived")
-    for mod_name in SUITES:
-        if args.only and args.only not in mod_name:
-            continue
+    for mod_name in selected:
         t0 = time.time()
         mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
-        for line in mod.run():
+        if args.smoke and not _supports_smoke(mod.run):
+            print(f"# {mod_name} skipped (no smoke mode)", flush=True)
+            continue
+        lines = mod.run(smoke=True) if args.smoke else mod.run()
+        for line in lines:
             print(line, flush=True)
         print(f"# {mod_name} done in {time.time() - t0:.1f}s", flush=True)
 

@@ -1,0 +1,76 @@
+"""Full-SVD (reflector-tape) overhead vs values-only pipeline.
+
+Measures, per (n, bw) shape and batch size B:
+
+  * ``values``  — ``svd_batched`` (sigma only);
+  * ``vectors`` — ``svd_batched(..., compute_uv=True)`` (tape record +
+    wavefront replay + stage-3 inverse iteration);
+
+reporting the vectors/values time ratio in the derived column — the cost of
+turning the paper's values-only chase into a full SVD.  The tape replay
+shares the chase's wavefront batching, so the ratio should stay roughly
+flat in B.
+
+  PYTHONPATH=src python -m benchmarks.run --only vectors
+  PYTHONPATH=src python -m benchmarks.run --only vectors --smoke
+  PYTHONPATH=src python benchmarks/vectors.py
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+if __package__ in (None, ""):                 # direct script execution
+    _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _REPO)
+    sys.path.insert(0, os.path.join(_REPO, "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+
+FULL = dict(shapes=((48, 8), (96, 8)), batches=(1, 4), tw=4)
+SMOKE = dict(shapes=((24, 6),), batches=(1, 2), tw=2)
+
+
+def run(smoke: bool = False):
+    from repro.core import svd as svdmod
+    from repro.core.tuning import PipelineConfig
+
+    p = SMOKE if smoke else FULL
+    out = []
+    rng = np.random.default_rng(0)
+    for n, bw in p["shapes"]:
+        cfg = PipelineConfig.resolve(bw=bw, tw=p["tw"], backend="ref",
+                                     dtype=np.float64, n=n)
+        for B in p["batches"]:
+            mats = jnp.asarray(rng.standard_normal((B, n, n)))
+
+            def values(ms=mats):
+                return svdmod.svd_batched(ms, config=cfg)
+
+            def vectors(ms=mats):
+                return svdmod.svd_batched(ms, config=cfg, compute_uv=True)
+
+            t_val = timeit(values)
+            t_vec = timeit(vectors)
+            out.append(row(f"vectors/values/n{n}/bw{bw}/B{B}", t_val * 1e6))
+            out.append(row(f"vectors/full_svd/n{n}/bw{bw}/B{B}", t_vec * 1e6,
+                           f"uv_overhead={t_vec / t_val:.2f}x"))
+            # sanity: the result is an actual SVD (cheap shapes only)
+            u, s, vt = (np.asarray(x) for x in vectors())
+            err = np.abs(u[0] @ np.diag(s[0]) @ vt[0] - np.asarray(mats)[0]).max()
+            out.append(row(f"vectors/recon_err/n{n}/bw{bw}/B{B}", 0.0,
+                           f"max_abs_err={err:.2e}"))
+    return out
+
+
+if __name__ == "__main__":
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    print("name,us_per_call,derived")
+    for line in run(smoke="--smoke" in sys.argv):
+        print(line, flush=True)

@@ -5,15 +5,34 @@ from repro.core.band import pack, unpack, band_height, bandwidth_of
 from repro.core.householder import make_reflector, apply_left, apply_right
 from repro.core.bulge_chasing import (
     bidiagonalize, bidiagonalize_packed, reduce_stage_packed,
-    reduce_stage_dense_ref, bidiagonalize_dense_ref, stage_schedule, tw_schedule,
+    stage_schedule, tw_schedule,
 )
 from repro.core.stage1 import band_reduce
+# (``repro.core.bidiag_svd.bidiag_svd`` — the stage-3 vector solver — is
+# likewise accessed via its module to avoid shadowing the submodule name.)
 from repro.core.bidiag_svd import bidiag_singular_values
+# NOTE: the full-SVD entry point is ``repro.core.svd.svd`` — deliberately
+# NOT re-exported here, where it would shadow the ``repro.core.svd``
+# submodule binding (``from repro.core import svd`` must keep returning the
+# module for existing callers).
 from repro.core.svd import (
     singular_values, banded_singular_values, bidiagonal_of,
-    batched_singular_values, svd_batched,
+    batched_singular_values, svd_batched, banded_svd,
 )
+from repro.core.transforms import ChaseTape, accumulate_transforms
 from repro.core.tuning import (
     ChaseConfig, PipelineConfig, default_tilewidth, occupancy_matrix_size,
     stage_plan,
 )
+
+# Numpy test oracles (core/reference.py) re-export lazily — PEP 562 — so
+# importing the package never loads the oracle module on the hot path.
+_LAZY_ORACLES = ("reduce_stage_dense_ref", "bidiagonalize_dense_ref",
+                 "bidiagonalize_dense_ref_uv")
+
+
+def __getattr__(name):
+    if name in _LAZY_ORACLES:
+        from repro.core import reference
+        return getattr(reference, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,19 +1,18 @@
 """Band -> bidiagonal reduction via memory-aware bulge chasing (paper Alg. 1).
 
-Two implementations:
+``reduce_stage_packed`` / ``bidiagonalize_packed`` are the production JAX
+path: static-shape wavefront execution on packed band storage.  Per global
+cycle ``t`` every in-flight sweep executes one chase cycle; the paper's
+3-cycle separation guarantees the per-sweep windows are disjoint
+(stride between concurrent pivots = ``3*b_in - 1`` > window width
+``b_in + tw + 1``), so all windows are gathered, processed by one batched
+kernel call (Pallas on TPU / interpret or pure-jnp on CPU), and scattered
+back race-free.
 
-* ``reduce_stage_dense_ref`` / ``bidiagonalize_dense_ref`` — sequential numpy
-  oracle (float64, full-range reflector applies).  Obviously orthogonally
-  equivalent; used as the ground truth in tests.
-
-* ``reduce_stage_packed`` / ``bidiagonalize_packed`` — the production JAX path:
-  static-shape wavefront execution on packed band storage.  Per global cycle
-  ``t`` every in-flight sweep executes one chase cycle; the paper's 3-cycle
-  separation guarantees the per-sweep windows are disjoint
-  (stride between concurrent pivots = ``3*b_in - 1`` > window width
-  ``b_in + tw + 1``), so all windows are gathered, processed by one batched
-  kernel call (Pallas on TPU / interpret or pure-jnp on CPU), and scattered
-  back race-free.
+(The sequential numpy oracles — ``reduce_stage_dense_ref``,
+``bidiagonalize_dense_ref``, ``bidiagonalize_dense_ref_uv`` — live in
+``core/reference.py`` so this hot module stays numpy-free; they are
+re-exported here for back-compat.)
 
 Scheduling (stage reduces bandwidth ``b_in -> b_out = b_in - tw``):
 
@@ -38,134 +37,49 @@ windows, flattened to one fused kernel call over ``B*G`` slots (grid
 whose own wavefront ``G = ceil(n / (3*b_in - 1)) + 1`` cannot fill the
 machine (paper Eq. 1) — recover occupancy: independent problems fill the
 idle wavefront slots.
+
+Reflector tapes (DESIGN.md §8): every entry point accepts ``tape=True``,
+under which the chase additionally records each cycle's Householder pair
+``(v, tau)`` per (global cycle, wavefront slot) into static-shape arrays —
+the *reflector tape*.  ``core/transforms.py`` replays tapes into the left
+and right transform accumulators (``U`` / ``V^T``) with the same wavefront
+batching, which is what turns the values-only pipeline into a full SVD.
 """
 
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import band as bandmod
+
+# Back-compat re-exports of the numpy oracles (historical home; the
+# implementations moved to core/reference.py).  Lazy (PEP 562) so that
+# importing this hot module does not pull in numpy or the oracle code —
+# the point of the move.
+_REFERENCE_EXPORTS = ("_np_reflector", "reduce_stage_dense_ref",
+                      "bidiagonalize_dense_ref", "bidiagonalize_dense_ref_uv")
+
+
+def __getattr__(name):
+    if name in _REFERENCE_EXPORTS:
+        from repro.core import reference
+        return getattr(reference, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
     "reduce_stage_dense_ref",
     "bidiagonalize_dense_ref",
+    "bidiagonalize_dense_ref_uv",
     "reduce_stage_packed",
     "bidiagonalize_packed",
     "bidiagonalize",
     "chase_cycle_indices",
     "stage_schedule",
 ]
-
-
-# ---------------------------------------------------------------------------
-# Sequential dense oracle (numpy, float64)
-# ---------------------------------------------------------------------------
-
-def _np_reflector(x: np.ndarray):
-    alpha = x[0]
-    sigma = float(np.dot(x[1:], x[1:]))
-    if sigma == 0.0:
-        return None, 0.0, alpha
-    mu = math.sqrt(alpha * alpha + sigma)
-    beta = -mu if alpha >= 0 else mu
-    tau = (beta - alpha) / beta
-    v = np.concatenate([[1.0], x[1:] / (alpha - beta)])
-    return v, tau, beta
-
-
-def reduce_stage_dense_ref(a: np.ndarray, b_in: int, tw: int) -> np.ndarray:
-    """One SBR stage, sequential, full-range applies. a: (n, n) float64."""
-    a = np.array(a, dtype=np.float64)
-    n = a.shape[0]
-    b_out = b_in - tw
-    assert b_out >= 1
-    for R in range(0, max(n - 1 - b_out, 0)):
-        p = R + b_out
-        r = R
-        while p <= n - 1:
-            hi = min(p + tw + 1, n)
-            # right reflector: annihilate a[r, p+1:hi]
-            v, tau, beta = _np_reflector(a[r, p:hi])
-            if tau != 0.0:
-                w = a[:, p:hi] @ v
-                a[:, p:hi] -= tau * np.outer(w, v)
-                a[r, p + 1 : hi] = 0.0
-                a[r, p] = beta
-            # left reflector: annihilate a[p+1:hi, p]
-            v, tau, beta = _np_reflector(a[p:hi, p])
-            if tau != 0.0:
-                w = v @ a[p:hi, :]
-                a[p:hi, :] -= tau * np.outer(v, w)
-                a[p + 1 : hi, p] = 0.0
-                a[p, p] = beta
-            r = p
-            p = p + b_in
-    return a
-
-
-def bidiagonalize_dense_ref(a: np.ndarray, bw: int, tw: int):
-    """Full SBR to bidiagonal: stages bw -> bw-tw -> ... -> 1. Returns (d, e, A)."""
-    a = np.array(a, dtype=np.float64)
-    b = bw
-    while b > 1:
-        twi = min(tw, b - 1)
-        a = reduce_stage_dense_ref(a, b, twi)
-        b -= twi
-    n = a.shape[0]
-    d = np.diagonal(a).copy()
-    e = np.diagonal(a, 1).copy()
-    return d, e, a
-
-
-def bidiagonalize_dense_ref_uv(a: np.ndarray, bw: int, tw: int):
-    """SBR with transform accumulation: A = U B V^T with B bidiagonal.
-
-    The paper computes singular values only and names vector accumulation as
-    future work (§VII); this oracle-level extension accumulates the left/right
-    reflector products alongside the chase (each chase reflector also updates
-    U's columns / V's columns — O(n * tw) extra per cycle, the same wavefront
-    parallelism applies).  Returns (d, e, U, V) with U^T A V == B.
-    """
-    a = np.array(a, dtype=np.float64)
-    n = a.shape[0]
-    u = np.eye(n)
-    v = np.eye(n)
-    b = bw
-    while b > 1:
-        twi = min(tw, b - 1)
-        b_out = b - twi
-        for R in range(0, max(n - 1 - b_out, 0)):
-            p = R + b_out
-            r = R
-            while p <= n - 1:
-                hi = min(p + twi + 1, n)
-                vec, tau, beta = _np_reflector(a[r, p:hi])
-                if tau != 0.0:
-                    w = a[:, p:hi] @ vec
-                    a[:, p:hi] -= tau * np.outer(w, vec)
-                    a[r, p + 1 : hi] = 0.0
-                    a[r, p] = beta
-                    wv = v[:, p:hi] @ vec
-                    v[:, p:hi] -= tau * np.outer(wv, vec)
-                vec, tau, beta = _np_reflector(a[p:hi, p])
-                if tau != 0.0:
-                    w = vec @ a[p:hi, :]
-                    a[p:hi, :] -= tau * np.outer(vec, w)
-                    a[p + 1 : hi, p] = 0.0
-                    a[p, p] = beta
-                    wu = u[:, p:hi] @ vec
-                    u[:, p:hi] -= tau * np.outer(wu, vec)
-                r = p
-                p = p + b
-        b -= twi
-    d = np.diagonal(a).copy()
-    e = np.diagonal(a, 1).copy()
-    return d, e, u, v
 
 
 # ---------------------------------------------------------------------------
@@ -210,10 +124,10 @@ def chase_cycle_indices(t, g, n: int, b_in: int, tw: int):
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("n", "b_in", "tw", "backend",
-                                             "unroll", "config"))
+                                             "unroll", "config", "tape"))
 def reduce_stage_packed(band: jax.Array, *, n: int, b_in: int, tw: int,
                         backend: str = "auto", unroll: int | None = None,
-                        config=None) -> jax.Array:
+                        config=None, tape: bool = False):
     """One SBR stage on packed band storage, batch-native.
 
     band: (..., b_in + 2*tw + 1, >= n) — any leading batch axes (flattened to
@@ -222,6 +136,14 @@ def reduce_stage_packed(band: jax.Array, *, n: int, b_in: int, tw: int,
     wavefront clock: per global cycle the (B, G, H, W) window gather is
     flattened into ONE fused kernel call over B*G slots, so independent
     problems fill wavefront slots a single small matrix leaves idle.
+
+    With ``tape=True`` the stage additionally records the reflector tape and
+    returns ``(band, tape_v, tape_tau)`` with static shapes
+    ``tape_v: (..., T, G, 2, tw+1)`` and ``tape_tau: (..., T, G, 2)`` —
+    index 0 of the pair axis is the right reflector (accumulates into V),
+    index 1 the left one (into U); inactive slots carry ``tau = 0``
+    (identity on replay).  The in-band arithmetic is byte-for-byte the same
+    either way, so (d, e) — and hence sigma — do not change with the tape.
 
     Explicit ``backend=``/``unroll=`` kwargs win over ``config``; the config
     fills whatever was left at its default ("auto" / None).  Backend/interpret
@@ -243,6 +165,10 @@ def reduce_stage_packed(band: jax.Array, *, n: int, b_in: int, tw: int,
     B = band3.shape[0]
     nsweeps, T, G = stage_schedule(n, b_in, tw)
     if nsweeps == 0 or T == 0:
+        if tape:
+            empty_v = jnp.zeros(lead + (0, G, 2, tw + 1), band.dtype)
+            empty_t = jnp.zeros(lead + (0, G, 2), band.dtype)
+            return band, empty_v, empty_t
         return band
 
     ncols0 = band3.shape[-1]
@@ -260,23 +186,42 @@ def reduce_stage_packed(band: jax.Array, *, n: int, b_in: int, tw: int,
     g_idx = jnp.arange(G)
     rows = jnp.arange(H)[None, :, None]              # (1, H, 1) band row per cell
 
-    def cycle(t, bandp):
+    def cycle(t, carry):
+        bandp = carry[0] if tape else carry
         _, _, p, active, is_first = chase_cycle_indices(t, g_idx, n, b_in, tw)
         p_safe = jnp.where(active, p, dump + g_idx * W).astype(jnp.int32)
         cols = p_safe[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]   # (G, W)
         # gather rolled dense windows: (B, G, H, W)
         win = bandp[:, d_gather[None], cols[:, None, :]]
         win = jnp.where(gather_valid[None, None], win, 0)
-        out = ops.chase_cycle(win.reshape(B * G, H, W), jnp.tile(is_first, B),
-                              b_in=b_in, tw=tw, backend=backend, config=config)
+        res = ops.chase_cycle(win.reshape(B * G, H, W), jnp.tile(is_first, B),
+                              b_in=b_in, tw=tw, backend=backend, config=config,
+                              with_tape=tape)
+        out = res[0] if tape else res
         out = out.reshape(B, G, H, W)
         out = jnp.where(active[None, :, None, None], out, win)
         # shear back to band coords and scatter (windows disjoint per matrix)
         orig = bandp[:, rows, cols[:, None, :]]                  # (B, G, H, W)
         vals = out[:, g_idx[:, None, None], y_back[None], ww[None]]
         vals = jnp.where(back_valid[None, None], vals, orig)
-        return bandp.at[:, rows, cols[:, None, :]].set(vals)
+        bandp = bandp.at[:, rows, cols[:, None, :]].set(vals)
+        if not tape:
+            return bandp
+        tape_v, tape_tau = carry[1], carry[2]
+        vs = res[1].reshape(B, G, 2, tw + 1)
+        ts = res[2].reshape(B, G, 2)
+        ts = jnp.where(active[None, :, None], ts, 0)             # identity replay
+        return (bandp, tape_v.at[:, t].set(vs), tape_tau.at[:, t].set(ts))
 
+    if tape:
+        tape_v0 = jnp.zeros((B, T, G, 2, tw + 1), band.dtype)
+        tape_tau0 = jnp.zeros((B, T, G, 2), band.dtype)
+        bandp, tape_v, tape_tau = jax.lax.fori_loop(
+            0, T, cycle, (bandp, tape_v0, tape_tau0), unroll=unroll)
+        out = bandp[..., :ncols0]
+        return (out.reshape(lead + out.shape[-2:]),
+                tape_v.reshape(lead + tape_v.shape[1:]),
+                tape_tau.reshape(lead + tape_tau.shape[1:]))
     bandp = jax.lax.fori_loop(0, T, cycle, bandp, unroll=unroll)
     out = bandp[..., :ncols0]
     return out.reshape(lead + out.shape[-2:])
@@ -293,8 +238,8 @@ def tw_schedule(bw: int, tw: int) -> list[tuple[int, int]]:
 
 
 def bidiagonalize_packed(band: jax.Array, *, n: int, bw: int, tw: int,
-                         backend: str = "auto",
-                         config=None) -> tuple[jax.Array, jax.Array]:
+                         backend: str = "auto", config=None,
+                         tape: bool = False):
     """Full SBR bw -> 1 on packed storage. Returns (diag, superdiag).
 
     ``band`` must be packed with tw_0 = min(tw, bw-1) sub rows, i.e. via
@@ -302,10 +247,16 @@ def bidiagonalize_packed(band: jax.Array, *, n: int, bw: int, tw: int,
     is threaded through every stage.  Host loop over stages (static,
     <= ceil((bw-1)/tw) iterations); each stage jits once per shape.
 
+    With ``tape=True`` returns ``(diag, superdiag, tapes)`` where ``tapes``
+    is a static-length list of :class:`repro.core.transforms.ChaseTape`,
+    one per stage of the tile-width plan, in execution order.
+
     Storage layout invariant entering each stage (b_in, tw_i):
       tw_i sub rows | diag row | b_in + tw_i sup rows  ==  b_in + 2*tw_i + 1.
     Between stages the storage is re-sliced (outer diagonals are now zero).
     """
+    if tape:
+        from repro.core import transforms  # deferred: transforms imports us
     plan = tw_schedule(bw, tw)
     if not plan:
         h = band.shape[-2]
@@ -313,31 +264,41 @@ def bidiagonalize_packed(band: jax.Array, *, n: int, bw: int, tw: int,
         d = bandmod.band_extract_diag(band, tw0, 0, n)
         e = (bandmod.band_extract_diag(band, tw0, 1, n) if bw >= 1
              else jnp.zeros(band.shape[:-2] + (n,), band.dtype))
-        return d, e
+        return (d, e, []) if tape else (d, e)
     cur = band
     tw_cur = plan[0][1]
     assert cur.shape[-2] == plan[0][0] + 2 * tw_cur + 1, (cur.shape, plan[0])
+    tapes = []
     for b_in, twi in plan:
         # re-slice so exactly twi sub rows remain above the diagonal row
         h_i = b_in + 2 * twi + 1
         start = tw_cur - twi
         if start != 0 or cur.shape[-2] != h_i:
             cur = jax.lax.slice_in_dim(cur, start, start + h_i, axis=-2)
-        cur = reduce_stage_packed(cur, n=n, b_in=b_in, tw=twi, backend=backend,
-                                  config=config)
+        if tape:
+            cur, tv, tt = reduce_stage_packed(cur, n=n, b_in=b_in, tw=twi,
+                                              backend=backend, config=config,
+                                              tape=True)
+            tapes.append(transforms.ChaseTape(n=n, b_in=b_in, tw=twi,
+                                              v=tv, tau=tt))
+        else:
+            cur = reduce_stage_packed(cur, n=n, b_in=b_in, tw=twi,
+                                      backend=backend, config=config)
         tw_cur = twi
     d = bandmod.band_extract_diag(cur, tw_cur, 0, n)
     e = bandmod.band_extract_diag(cur, tw_cur, 1, n)
-    return d, e
+    return (d, e, tapes) if tape else (d, e)
 
 
 def bidiagonalize(a: jax.Array, *, bw: int, tw: int, backend: str = "auto",
-                  config=None) -> tuple[jax.Array, jax.Array]:
+                  config=None, tape: bool = False):
     """Dense upper-banded (..., n, n) -> (..., n) diag + superdiag pair via
     packed wavefront SBR; a leading batch axis runs batch-native (one fused
-    wavefront over all matrices), not as a vmapped loop."""
+    wavefront over all matrices), not as a vmapped loop.  ``tape=True``
+    additionally returns the per-stage reflector tapes (see
+    :func:`bidiagonalize_packed`)."""
     n = a.shape[-1]
     tw0 = min(tw, max(bw - 1, 1))
     packed = bandmod.pack(a, bw, tw0)
     return bidiagonalize_packed(packed, n=n, bw=bw, tw=tw, backend=backend,
-                                config=config)
+                                config=config, tape=tape)

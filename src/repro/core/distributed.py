@@ -25,7 +25,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import svd as svdmod
 
 __all__ = ["batched_singular_values", "sharded_singular_values",
-           "spectrum_of_params", "square_embed"]
+           "sharded_svd", "spectrum_of_params", "square_embed"]
 
 
 def square_embed(w: jax.Array, size: int) -> jax.Array:
@@ -42,30 +42,48 @@ def square_embed(w: jax.Array, size: int) -> jax.Array:
 
 def batched_singular_values(mats: jax.Array, *, bw: int | None = None,
                             tw: int | None = None, backend: str = "auto",
-                            config=None) -> jax.Array:
+                            config=None, compute_uv: bool = False):
     """Batch-native three-stage pipeline: (B, n, n) -> (B, n) descending sigma.
 
-    Delegates to ``core.svd.batched_singular_values`` (one fused wavefront
-    over all B chases — the former vmapped-loop formulation is subsumed).
+    Delegates to ``core.svd`` (one fused wavefront over all B chases — the
+    former vmapped-loop formulation is subsumed).  ``compute_uv=True``
+    returns ``(U, sigma, V^T)`` via the reflector-tape pipeline.
     """
+    if compute_uv:
+        return svdmod.svd_batched(mats, config=config, compute_uv=True,
+                                  bw=bw, tw=tw, backend=backend)
     return svdmod.batched_singular_values(mats, bw=bw, tw=tw, backend=backend,
                                           config=config)
 
 
 def sharded_singular_values(mats: jax.Array, mesh: Mesh, *, bw: int = 32,
                             tw: int | None = None, backend: str = "auto",
-                            batch_axes: tuple[str, ...] = ("data",)
-                            ) -> jax.Array:
+                            batch_axes: tuple[str, ...] = ("data",),
+                            compute_uv: bool = False):
     """Batch-dispatch spectra across the mesh: (B, n, n) -> (B, n).
 
     B must be divisible by the product of ``batch_axes`` sizes; each device
     group computes its matrices fully locally (GPU-residency -> core-residency).
+    With ``compute_uv=True`` each shard additionally replays its reflector
+    tapes locally — vector accumulation needs no collectives either (one
+    matrix never crosses a core) — returning sharded ``(U, sigma, V^T)``.
     """
     spec = P(batch_axes)
-    fn = functools.partial(batched_singular_values, bw=bw, tw=tw, backend=backend)
-    shard_fn = jax.shard_map(fn, mesh=mesh, in_specs=(spec,), out_specs=spec,
-                             check_vma=False)
+    fn = functools.partial(batched_singular_values, bw=bw, tw=tw,
+                           backend=backend, compute_uv=compute_uv)
+    out_specs = (spec, spec, spec) if compute_uv else spec
+    shard_fn = jax.shard_map(fn, mesh=mesh, in_specs=(spec,),
+                             out_specs=out_specs, check_vma=False)
     return shard_fn(mats)
+
+
+def sharded_svd(mats: jax.Array, mesh: Mesh, *, bw: int = 32,
+                tw: int | None = None, backend: str = "auto",
+                batch_axes: tuple[str, ...] = ("data",)):
+    """Full SVD batch-dispatched across the mesh: (B, n, n) ->
+    ``(U (B, n, n), sigma (B, n), V^T (B, n, n))``, batch-sharded."""
+    return sharded_singular_values(mats, mesh, bw=bw, tw=tw, backend=backend,
+                                   batch_axes=batch_axes, compute_uv=True)
 
 
 def spectrum_of_params(params, *, size: int = 256, bw: int = 32,

@@ -69,9 +69,10 @@ def wy_t_factor(v: jax.Array, taus: jax.Array) -> jax.Array:
     return jax.lax.fori_loop(0, k, body, jnp.zeros((k, k), v.dtype))
 
 
-@functools.partial(jax.jit, static_argnames=("nb", "backend", "config"))
+@functools.partial(jax.jit, static_argnames=("nb", "backend", "config",
+                                             "tape"))
 def band_reduce(a: jax.Array, *, nb: int, backend: str | None = None,
-                config=None) -> jax.Array:
+                config=None, tape: bool = False):
     """Reduce dense (..., n, n) to upper-banded form with bandwidth ``nb``.
 
     Singular values are preserved exactly (two-sided orthogonal transforms).
@@ -83,19 +84,26 @@ def band_reduce(a: jax.Array, *, nb: int, backend: str | None = None,
     left of the panel hold exact zeros in V's row support, so the apply is a
     no-op there).  An explicit ``backend=`` wins; otherwise a resolved
     ``config`` supplies it; otherwise "ref".
+
+    With ``tape=True`` returns ``(banded, (vq, tq, vl, tl))`` — the per-panel
+    compact-WY reflector tape: ``vq/vl (..., P, n, nb)`` (QR / LQ reflector
+    blocks, rows truncated to n — padding rows are structurally zero) and
+    ``tq/tl (..., P, nb, nb)`` (their T factors).  Replayed into ``U``/``V^T``
+    by ``core/transforms.py``; the banded output is bit-identical either way.
     """
     if backend is None:
         backend = config.backend if config is not None else "ref"
     if a.ndim > 2:
-        fn = lambda m: _band_reduce_2d(m, nb=nb, backend=backend, config=config)
+        fn = lambda m: _band_reduce_2d(m, nb=nb, backend=backend,
+                                       config=config, tape=tape)
         for _ in range(a.ndim - 2):
             fn = jax.vmap(fn)
         return fn(a)
-    return _band_reduce_2d(a, nb=nb, backend=backend, config=config)
+    return _band_reduce_2d(a, nb=nb, backend=backend, config=config, tape=tape)
 
 
 def _band_reduce_2d(a: jax.Array, *, nb: int, backend: str,
-                    config=None) -> jax.Array:
+                    config=None, tape: bool = False):
     n = a.shape[0]
     dt = a.dtype
     acc = _acc_dtype(dt)
@@ -104,7 +112,8 @@ def _band_reduce_2d(a: jax.Array, *, nb: int, backend: str,
     a = jnp.zeros((big, big), acc).at[:n, :n].set(a.astype(acc))
     idx = jnp.arange(big)
 
-    def panel(k, a):
+    def panel(k, carry):
+        a = carry[0] if tape else carry
         c0 = k * nb
 
         # -------- QR panel: columns [c0, c0+nb), pivot row c0+j --------------
@@ -163,7 +172,21 @@ def _band_reduce_2d(a: jax.Array, *, nb: int, backend: str,
         w = a @ vr_blk
         w = jnp.where(idx[:, None] >= c0 + nb, w, 0)
         a = a - w @ (tr @ vr_blk.T)
-        return a
+        if not tape:
+            return a
+        vqs, tqs, vls, tls = carry[1:]
+        return (a, vqs.at[k].set(v_blk), tqs.at[k].set(t),
+                vls.at[k].set(vr_blk), tls.at[k].set(tr))
 
+    if tape:
+        z_v = jnp.zeros((n_panels, big, nb), acc)
+        z_t = jnp.zeros((n_panels, nb, nb), acc)
+        a, vqs, tqs, vls, tls = jax.lax.fori_loop(
+            0, n_panels, panel, (a, z_v, z_t, z_v, z_t))
+        # rows >= n of every reflector block are structurally zero (the
+        # padded matrix region never becomes nonzero), so the tape can be
+        # truncated to matrix rows — replay then lives in (n, n) space.
+        return (a[:n, :n].astype(dt),
+                (vqs[:, :n], tqs, vls[:, :n], tls))
     a = jax.lax.fori_loop(0, n_panels, panel, a)
     return a[:n, :n].astype(dt)

@@ -1,7 +1,7 @@
-"""Three-stage singular value pipeline (paper §I), batch-native:
+"""Three-stage SVD pipeline (paper §I), batch-native:
 
   dense --stage1--> banded --stage2 (paper: bulge chasing)--> bidiagonal
-        --stage3--> singular values
+        --stage3--> singular values [+ vectors via reflector-tape replay]
 
 ``singular_values`` runs all three stages on-device; ``banded_singular_values``
 enters at stage 2 (the paper's direct use case: banded inputs from spectral
@@ -13,14 +13,24 @@ the occupancy a single chase cannot reach (paper Eq. 1; DESIGN.md §4).
 ``batched_singular_values`` / ``svd_batched`` make the batched contract
 explicit; the serve layer (``serve/engine.py``) buckets traffic onto them.
 
+Full SVD (beyond-paper; the paper names transform accumulation as §VII
+future work): ``svd(a)`` / ``svd_batched(..., compute_uv=True)`` /
+``banded_svd(a)`` return ``(U, sigma, V^T)``.  Stages 1–2 run in ``tape``
+mode (recording every Householder reflector, DESIGN.md §8),
+``core/transforms.py`` replays the tapes into U/V^T with the chase's own
+wavefront batching, and stage 3 adds the bidiagonal's vectors via inverse
+iteration seeded by the same Sturm bisection — sigma is bit-identical to
+the values-only path.
+
 Configuration: every entry point takes ``config=``, a resolved
 ``tuning.PipelineConfig`` that owns the backend (kernel registry key), the
-tile-width schedule, and batch sizing.  The legacy ``bw=/tw=/backend=``
-kwargs remain and are resolved into a config internally; passing a kwarg
-that conflicts with a supplied config raises:
+tile-width schedule, batch sizing, and the ``compute_uv`` default.  The
+legacy ``bw=/tw=/backend=`` kwargs remain and are resolved into a config
+internally; passing a kwarg that conflicts with a supplied config raises:
 
     cfg = PipelineConfig.resolve(bw=16, dtype=jnp.float32)   # once
     sigma = svd_batched(stacked, config=cfg)                 # everywhere
+    u, s, vt = svd_batched(stacked, config=cfg, compute_uv=True)
 """
 
 from __future__ import annotations
@@ -33,10 +43,11 @@ import jax.numpy as jnp
 from repro.core import bulge_chasing as bc
 from repro.core import stage1 as s1
 from repro.core import bidiag_svd as s3
+from repro.core import transforms
 from repro.core import tuning
 
 __all__ = ["singular_values", "banded_singular_values", "bidiagonal_of",
-           "batched_singular_values", "svd_batched"]
+           "batched_singular_values", "svd_batched", "svd", "banded_svd"]
 
 
 def bidiagonal_of(a: jax.Array, *, bw: int | None = None,
@@ -96,13 +107,84 @@ def batched_singular_values(mats: jax.Array, *, bw: int | None = None,
 
 
 def svd_batched(mats: jax.Array,
-                config: tuning.PipelineConfig | None = None, **overrides
-                ) -> jax.Array:
+                config: tuning.PipelineConfig | None = None, *,
+                compute_uv: bool | None = None, **overrides):
     """Config-first batched entry point: ``svd_batched(stacked, cfg)``.
 
     Sugar over :func:`batched_singular_values` for callers that already hold
     a resolved :class:`tuning.PipelineConfig` (the serve engine, benchmarks).
     ``overrides`` are the legacy ``bw=/tw=/backend=`` kwargs (conflicts with
-    the config raise).
+    the config raise).  ``compute_uv=True`` (or a config with
+    ``compute_uv=True``) returns ``(U, sigma, V^T)`` instead of sigma alone;
+    sigma is bit-identical between the two modes.
     """
+    if compute_uv is None:
+        compute_uv = config.compute_uv if config is not None else False
+    if compute_uv:
+        assert mats.ndim == 3, f"expected stacked (B, n, n), got {mats.shape}"
+        return svd(mats, config=config, compute_uv=True, **overrides)
     return batched_singular_values(mats, config=config, **overrides)
+
+
+# ---------------------------------------------------------------------------
+# Full SVD: reflector tapes -> (U, sigma, V^T)
+# ---------------------------------------------------------------------------
+
+def _uv_pipeline(a: jax.Array, *, config: tuning.PipelineConfig,
+                 banded: bool):
+    """Tape-mode pipeline: returns (U, sigma, V^T) with A = U diag(s) V^T.
+
+    Stage-1/2 band arithmetic is identical to the values-only path (the tape
+    is recorded alongside, never read by it), so (d, e) — and the bisection
+    sigma — are bit-identical.  The tapes are then replayed into transposed
+    accumulators through the ``tape_apply`` registry op, and stage 3's
+    bidiagonal vectors are composed on top.
+    """
+    n = a.shape[-1]
+    lead = a.shape[:-2]
+    if banded:
+        s1_tape = None
+        band_in = a
+    else:
+        band_in, s1_tape = s1.band_reduce(a, nb=config.bw, config=config,
+                                          tape=True)
+    d, e, chase_tapes = bc.bidiagonalize(band_in, bw=config.bw, tw=config.tw,
+                                         config=config, tape=True)
+    u2, vt2 = transforms.accumulate_transforms(
+        n, s1_tape=s1_tape, chase_tapes=chase_tapes, lead=lead,
+        dtype=a.dtype, config=config)
+    ub, sig, vtb = s3.bidiag_svd(d, e)
+    # A = U2 B V2^T and B = Ub S Vb^T  =>  U = U2 Ub, V^T = Vb^T V2^T.
+    u = jnp.matmul(u2, ub)
+    vt = jnp.matmul(vtb, vt2)
+    return u, sig, vt
+
+
+def svd(a: jax.Array, *, bw: int | None = None, tw: int | None = None,
+        backend: str = "auto", config: tuning.PipelineConfig | None = None,
+        compute_uv: bool = True):
+    """Full SVD of dense (..., n, n): ``(U, sigma, V^T)``, sigma descending.
+
+    ``compute_uv=False`` degrades to :func:`singular_values` (and the sigma
+    returned either way are bit-identical — the tape mode records reflectors
+    alongside the same band arithmetic, it never alters it).  Batched inputs
+    run batch-native end to end, including the tape replay (one fused
+    ``tape_apply`` call over all B*G wavefront slots per cycle).
+    """
+    cfg = tuning.PipelineConfig.of(config, bw=bw, tw=tw, backend=backend,
+                                   dtype=a.dtype, n=a.shape[-1])
+    if not compute_uv:
+        return _three_stage(a, config=cfg)
+    return _uv_pipeline(a, config=cfg, banded=False)
+
+
+def banded_svd(a: jax.Array, *, bw: int | None = None, tw: int | None = None,
+               backend: str = "auto",
+               config: tuning.PipelineConfig | None = None,
+               compute_uv: bool = True):
+    """Full SVD of upper-banded (..., n, n) (stages 2+3 only)."""
+    cfg = tuning.PipelineConfig.of(config, bw=bw, tw=tw, backend=backend,
+                                   dtype=a.dtype, n=a.shape[-1])
+    if not compute_uv:
+        return banded_singular_values(a, config=cfg)
+    return _uv_pipeline(a, config=cfg, banded=True)

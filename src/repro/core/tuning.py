@@ -143,6 +143,7 @@ class PipelineConfig:
     dtype: str = "float32"      # working precision of stages 1-2
     max_batch: int = 8          # serve bucket capacity (leading batch axis B)
     unroll: int = 1             # fori_loop unroll of the wavefront stage
+    compute_uv: bool = False    # full SVD: record + replay reflector tapes
 
     @property
     def plan(self) -> tuple[tuple[int, int], ...]:
@@ -164,17 +165,23 @@ class PipelineConfig:
     def resolve(cls, *, bw: int = 32, tw: int | None = None,
                 backend: str = "auto", interpret: bool | None = None,
                 dtype=jnp.float32, n: int | None = None,
-                max_batch: int | None = None, unroll: int = 1
-                ) -> "PipelineConfig":
+                max_batch: int | None = None, unroll: int = 1,
+                compute_uv: bool = False) -> "PipelineConfig":
         """Resolve every knob to a concrete value.
 
         ``backend="auto"`` and ``interpret=None`` are resolved by the backend
         registry (pallas on TPU, ref elsewhere; interpret off-TPU only);
         ``tw=None`` falls back to the cache-line/lane heuristic;
         ``max_batch=None`` uses the Eq.-1 occupancy deficit for (n, bw).
+        ``bw`` is clamped to >= 1 (bw = 0 — e.g. a 1x1 problem — would zero
+        the stage-1 panel width; a bw-1 "band" is already bidiagonal, so
+        stage 2 is a no-op pass-through either way).
         """
         from repro.kernels import ops  # deferred: registry lives kernels-side
 
+        bw = max(bw, 1)
+        if n is not None:
+            bw = min(bw, max(n, 1))
         tw = tw if tw is not None else default_tilewidth(bw, dtype)
         tw = max(1, min(tw, max(bw - 1, 1)))
         backend, interpret = ops.resolve_backend(backend, interpret)
@@ -182,7 +189,7 @@ class PipelineConfig:
             max_batch = default_bucket_batch(n, bw) if n else 8
         return cls(bw=bw, tw=tw, backend=backend, interpret=interpret,
                    dtype=jnp.dtype(dtype).name, max_batch=max_batch,
-                   unroll=unroll)
+                   unroll=unroll, compute_uv=compute_uv)
 
     @classmethod
     def of(cls, config: "PipelineConfig | None", *, bw: int | None = None,

@@ -49,7 +49,9 @@ def _reflector_in_kernel(x, acc):
     return v, tau, jnp.where(safe, beta, alpha)
 
 
-def _chase_kernel(first_ref, win_ref, out_ref, *, b_in: int, tw: int):
+def _chase_kernel(first_ref, win_ref, out_ref, *refs, b_in: int, tw: int):
+    # refs: optionally (vs_ref, taus_ref) when the reflector tape is recorded.
+    vs_ref, taus_ref = refs if refs else (None, None)
     h = b_in + 2 * tw + 1
     w = b_in + tw + 1
     dt = win_ref.dtype
@@ -87,25 +89,49 @@ def _chase_kernel(first_ref, win_ref, out_ref, *, b_in: int, tw: int):
     win = win.at[y0:, :].set(blk2.astype(dt))
 
     out_ref[0] = win
+    if vs_ref is not None:
+        # Reflector tape (DESIGN.md §8): the pair this cycle applied, written
+        # alongside the in-place band update.  Row 0: right reflector (spans
+        # matrix columns [p, p+tw], replayed into V); row 1: left (rows
+        # [p, p+tw], into U).  Same VMEM-resident values the applies used.
+        vs_ref[0] = jnp.stack([v.astype(dt), v2.astype(dt)])
+        taus_ref[0] = jnp.stack([tau, tau2]).astype(dt)[:, None]
 
 
-@functools.partial(jax.jit, static_argnames=("b_in", "tw", "interpret"))
+@functools.partial(jax.jit, static_argnames=("b_in", "tw", "interpret",
+                                             "with_tape"))
 def chase_cycle_pallas(windows: jax.Array, is_first: jax.Array, *, b_in: int,
-                       tw: int, interpret: bool = False) -> jax.Array:
-    """windows: (G, H, W) disjoint rolled windows; is_first: (G,) bool."""
+                       tw: int, interpret: bool = False,
+                       with_tape: bool = False):
+    """windows: (G, H, W) disjoint rolled windows; is_first: (G,) bool.
+
+    ``with_tape=True`` additionally returns the wavefront's reflector tape
+    slice ``(vs (G, 2, tw+1), taus (G, 2))`` — the window update itself is
+    computed by the identical instruction sequence either way."""
     g, h, w = windows.shape
     assert h == b_in + 2 * tw + 1 and w == b_in + tw + 1, (windows.shape, b_in, tw)
     first = is_first.astype(jnp.int32).reshape(g, 1)
     kern = functools.partial(_chase_kernel, b_in=b_in, tw=tw)
-    return pl.pallas_call(
+    out_shape = [jax.ShapeDtypeStruct(windows.shape, windows.dtype)]
+    out_specs = [pl.BlockSpec((1, h, w), lambda i: (i, 0, 0))]
+    if with_tape:
+        out_shape += [jax.ShapeDtypeStruct((g, 2, tw + 1), windows.dtype),
+                      jax.ShapeDtypeStruct((g, 2, 1), windows.dtype)]
+        out_specs += [pl.BlockSpec((1, 2, tw + 1), lambda i: (i, 0, 0)),
+                      pl.BlockSpec((1, 2, 1), lambda i: (i, 0, 0))]
+    res = pl.pallas_call(
         kern,
-        out_shape=jax.ShapeDtypeStruct(windows.shape, windows.dtype),
+        out_shape=tuple(out_shape),
         grid=(g,),
         in_specs=[
             pl.BlockSpec((1, 1), lambda i: (i, 0)),        # is_first scalar
             pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),  # window in VMEM
         ],
-        out_specs=pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
+        out_specs=tuple(out_specs),
         input_output_aliases={1: 0},
         interpret=interpret,
     )(first, windows)
+    if with_tape:
+        out, vs, taus = res
+        return out, vs, taus[..., 0]
+    return res[0]

@@ -1,4 +1,6 @@
-"""Pallas TPU kernel: compact-WY blocked reflector apply (stage-1 hotspot).
+"""Pallas TPU kernels: compact-WY blocked reflector applies.
+
+``hh_block_apply_pallas`` (stage-1 hotspot):
 
     C <- (I - V T V^T) C
 
@@ -8,6 +10,12 @@ Grid tiles the columns of C; V and T stay VMEM-resident across grid steps
 streams through in ``block_cols`` stripes — three MXU matmuls per stripe.
 This is the GEMM-dense counterpart of the memory-bound chase kernel: stage 1
 is where the paper's pipeline earns its "compute density" (paper §I).
+
+``tape_apply_pallas`` (tape replay, DESIGN.md §8) is the slot-batched
+variant used by ``core/transforms.py`` to replay reflector tapes into
+``U``/``V^T``: per wavefront slot ``s`` it applies ``(I - V_s T_s V_s^T)``
+to that slot's accumulator slice, grid ``(S, column stripes)`` — the same
+wavefront batching (``S = B*G``) as the chase itself.
 """
 
 from __future__ import annotations
@@ -18,40 +26,57 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["hh_block_apply_pallas"]
-
-
-def _wy_kernel(v_ref, t_ref, c_ref, o_ref):
-    acc = jnp.float32 if c_ref.dtype in (jnp.bfloat16, jnp.float16) else c_ref.dtype
-    v = v_ref[...].astype(acc)
-    t = t_ref[...].astype(acc)
-    c = c_ref[...].astype(acc)
-    w1 = jnp.dot(v.T, c, preferred_element_type=acc)       # (k, bc)
-    w2 = jnp.dot(t, w1, preferred_element_type=acc)        # (k, bc)
-    o_ref[...] = (c - jnp.dot(v, w2, preferred_element_type=acc)).astype(o_ref.dtype)
+__all__ = ["hh_block_apply_pallas", "tape_apply_pallas"]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_cols"))
 def hh_block_apply_pallas(v: jax.Array, t: jax.Array, c: jax.Array, *,
                           interpret: bool = False, block_cols: int = 512
                           ) -> jax.Array:
-    """C <- (I - V T V^T) C with column-striped pipelining."""
-    m, k = v.shape
-    n = c.shape[1]
-    bc = min(block_cols, n)
-    pad = (-n) % bc
-    cp = jnp.pad(c, ((0, 0), (0, pad))) if pad else c
-    grid = (cp.shape[1] // bc,)
+    """C <- (I - V T V^T) C with column-striped pipelining.
+
+    The single-problem view of :func:`tape_apply_pallas` (slot count 1) —
+    one kernel serves both the stage-1 trailing update and the tape replay.
+    """
+    return tape_apply_pallas(v[None], t[None], c[None], interpret=interpret,
+                             block_cols=block_cols)[0]
+
+
+def _tape_kernel(v_ref, t_ref, c_ref, o_ref):
+    acc = jnp.float32 if c_ref.dtype in (jnp.bfloat16, jnp.float16) else c_ref.dtype
+    v = v_ref[0].astype(acc)                               # (m, k)
+    t = t_ref[0].astype(acc)                               # (k, k)
+    c = c_ref[0].astype(acc)                               # (m, bc)
+    w1 = jnp.dot(v.T, c, preferred_element_type=acc)       # (k, bc)
+    w2 = jnp.dot(t, w1, preferred_element_type=acc)        # (k, bc)
+    o_ref[0] = (c - jnp.dot(v, w2, preferred_element_type=acc)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_cols"))
+def tape_apply_pallas(v: jax.Array, t: jax.Array, c: jax.Array, *,
+                      interpret: bool = False, block_cols: int = 512
+                      ) -> jax.Array:
+    """Per-slot C[s] <- (I - V[s] T[s] V[s]^T) C[s].
+
+    v: (S, m, k), t: (S, k, k), c: (S, m, w).  V/T are VMEM-resident per
+    slot; C streams in ``block_cols`` stripes, grid ``(S, stripes)``.
+    """
+    s, m, k = v.shape
+    w = c.shape[-1]
+    bc = min(block_cols, w)
+    pad = (-w) % bc
+    cp = jnp.pad(c, ((0, 0), (0, 0), (0, pad))) if pad else c
+    grid = (s, cp.shape[-1] // bc)
     out = pl.pallas_call(
-        _wy_kernel,
+        _tape_kernel,
         out_shape=jax.ShapeDtypeStruct(cp.shape, c.dtype),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((m, k), lambda i: (0, 0)),     # V resident
-            pl.BlockSpec((k, k), lambda i: (0, 0)),     # T resident
-            pl.BlockSpec((m, bc), lambda i: (0, i)),    # C streamed
+            pl.BlockSpec((1, m, k), lambda i, j: (i, 0, 0)),   # V per slot
+            pl.BlockSpec((1, k, k), lambda i, j: (i, 0, 0)),   # T per slot
+            pl.BlockSpec((1, m, bc), lambda i, j: (i, 0, j)),  # C streamed
         ],
-        out_specs=pl.BlockSpec((m, bc), lambda i: (0, i)),
+        out_specs=pl.BlockSpec((1, m, bc), lambda i, j: (i, 0, j)),
         interpret=interpret,
     )(v, t, cp)
-    return out[:, :n] if pad else out
+    return out[..., :w] if pad else out

@@ -24,7 +24,7 @@ import jax
 
 from repro.kernels import ref as _ref
 
-__all__ = ["chase_cycle", "hh_block_apply", "flash_attention",
+__all__ = ["chase_cycle", "hh_block_apply", "tape_apply", "flash_attention",
            "register_backend", "resolve_backend", "backend_names"]
 
 
@@ -90,10 +90,13 @@ def _resolve(backend: str, interpret: bool | None, config) -> tuple[str, bool]:
 
 register_backend(
     "ref",
-    chase_cycle=lambda windows, is_first, *, b_in, tw, interpret:
-        _ref.chase_cycle_ref(windows, is_first, b_in=b_in, tw=tw),
+    chase_cycle=lambda windows, is_first, *, b_in, tw, with_tape, interpret:
+        _ref.chase_cycle_ref(windows, is_first, b_in=b_in, tw=tw,
+                             with_tape=with_tape),
     hh_block_apply=lambda v, t, c, *, block_cols, interpret:
         _ref.hh_block_apply_ref(v, t, c),
+    tape_apply=lambda v, t, c, *, block_cols, interpret:
+        _ref.tape_apply_ref(v, t, c),
     flash_attention=lambda q, k, v, *, block_q, block_k, interpret:
         _ref.flash_attention_ref(q, k, v),
 )
@@ -101,16 +104,23 @@ register_backend(
 
 # ---- built-in "pallas" (lazy kernel imports keep CPU-only paths light) -----
 
-def _pallas_chase(windows, is_first, *, b_in, tw, interpret):
+def _pallas_chase(windows, is_first, *, b_in, tw, with_tape, interpret):
     from repro.kernels import bulge_chase
     return bulge_chase.chase_cycle_pallas(windows, is_first, b_in=b_in, tw=tw,
-                                          interpret=interpret)
+                                          interpret=interpret,
+                                          with_tape=with_tape)
 
 
 def _pallas_hh(v, t, c, *, block_cols, interpret):
     from repro.kernels import hh_apply
     return hh_apply.hh_block_apply_pallas(v, t, c, interpret=interpret,
                                           block_cols=block_cols)
+
+
+def _pallas_tape(v, t, c, *, block_cols, interpret):
+    from repro.kernels import hh_apply
+    return hh_apply.tape_apply_pallas(v, t, c, interpret=interpret,
+                                      block_cols=block_cols)
 
 
 def _pallas_flash(q, k, v, *, block_q, block_k, interpret):
@@ -120,7 +130,7 @@ def _pallas_flash(q, k, v, *, block_q, block_k, interpret):
 
 
 register_backend("pallas", chase_cycle=_pallas_chase, hh_block_apply=_pallas_hh,
-                 flash_attention=_pallas_flash)
+                 tape_apply=_pallas_tape, flash_attention=_pallas_flash)
 
 
 # ---------------------------------------------------------------------------
@@ -129,19 +139,41 @@ register_backend("pallas", chase_cycle=_pallas_chase, hh_block_apply=_pallas_hh,
 
 @functools.partial(jax.jit,
                    static_argnames=("b_in", "tw", "backend", "interpret",
-                                    "config"))
+                                    "config", "with_tape"))
 def chase_cycle(windows: jax.Array, is_first: jax.Array, *, b_in: int, tw: int,
                 backend: str = "auto", interpret: bool | None = None,
-                config=None) -> jax.Array:
+                config=None, with_tape: bool = False):
     """Process one wavefront of bulge-chase cycles.
 
     windows: (G, H, W) rolled dense windows (disjoint); is_first: (G,) bool.
     With a leading batch axis folded in, G = B * G_matrix — independent
     problems simply widen the wavefront (one fused call either way).
+
+    ``with_tape=True`` returns ``(windows, vs (G, 2, tw+1), taus (G, 2))``:
+    the reflector-tape slice for this wavefront (right reflector at pair
+    index 0, left at 1), recorded alongside the identical window update.
     """
     backend, interpret = _resolve(backend, interpret, config)
     return _impl("chase_cycle", backend)(windows, is_first, b_in=b_in, tw=tw,
+                                         with_tape=with_tape,
                                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "interpret",
+                                             "block_cols", "config"))
+def tape_apply(v: jax.Array, t: jax.Array, c: jax.Array, *,
+               backend: str = "auto", interpret: bool | None = None,
+               block_cols: int = 512, config=None) -> jax.Array:
+    """Slot-batched compact-WY left apply (the tape-replay workhorse):
+
+        C[s] <- (I - V[s] T[s] V[s]^T) C[s]
+
+    v: (S, m, k), t: (S, k, k), c: (S, m, w).  Chase-tape replay passes the
+    rank-1 form (k = 1, t = tau); stage-1 panel replay passes k = nb blocks.
+    """
+    backend, interpret = _resolve(backend, interpret, config)
+    return _impl("tape_apply", backend)(v, t, c, block_cols=block_cols,
+                                        interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "interpret",

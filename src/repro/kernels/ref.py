@@ -12,7 +12,8 @@ Cycle = (1) right reflector annihilating the TW-element row bulge of row
 line 7), then (2) left reflector annihilating the TW-element column bulge of the
 pivot column ``p``, applied to all W window columns.
 
-``hh_block_apply_ref`` is the oracle for the stage-1 WY blocked reflector apply.
+``hh_block_apply_ref`` is the oracle for the stage-1 WY blocked reflector apply;
+``tape_apply_ref`` for the batched compact-WY tape replay (core/transforms.py).
 """
 
 from __future__ import annotations
@@ -23,16 +24,21 @@ import jax.numpy as jnp
 from repro.core.householder import make_reflector
 
 __all__ = ["chase_window_ref", "chase_cycle_ref", "hh_block_apply_ref",
-           "flash_attention_ref"]
+           "tape_apply_ref", "flash_attention_ref"]
 
 
-def chase_window_ref(window: jax.Array, is_first: jax.Array, *, b_in: int, tw: int) -> jax.Array:
-    """Process one chase cycle on a rolled dense window.
+def _chase_window(window: jax.Array, is_first: jax.Array, *, b_in: int,
+                  tw: int):
+    """One chase cycle on a rolled dense window, returning the reflector pair.
 
     window: (H, W) with H = b_in + 2*tw + 1, W = b_in + tw + 1.
     is_first: scalar bool — first cycle of its sweep (overhang row at y=2*tw
     instead of y=tw; the rows in between are already-reduced zeros, so the
     unconditional apply over y >= tw is a no-op on them).
+
+    Returns ``(window, (v, tau), (v2, tau2))`` — the right reflector (spans
+    matrix columns [p, p+tw], accumulates into V on replay) and the left one
+    (spans matrix rows [p, p+tw], accumulates into U).
     """
     H, W = window.shape
     assert H == b_in + 2 * tw + 1 and W == b_in + tw + 1, (H, W, b_in, tw)
@@ -63,25 +69,56 @@ def chase_window_ref(window: jax.Array, is_first: jax.Array, *, b_in: int, tw: i
     col_fix = jnp.where(tau2 != 0, col_fix, blk2[:, 0].astype(dt))
     blk2 = blk2.astype(dt).at[:, 0].set(col_fix)
     window = window.at[y0:, :].set(blk2)
-    return window
+    return window, (v.astype(dt), tau.astype(dt)), (v2.astype(dt),
+                                                    tau2.astype(dt))
 
 
-def chase_cycle_ref(windows: jax.Array, is_first: jax.Array, *, b_in: int, tw: int) -> jax.Array:
-    """vmapped oracle over a batch of disjoint windows: (G, H, W)."""
-    fn = lambda w, f: chase_window_ref(w, f, b_in=b_in, tw=tw)
-    return jax.vmap(fn)(windows, is_first)
+def chase_window_ref(window: jax.Array, is_first: jax.Array, *, b_in: int, tw: int) -> jax.Array:
+    """Process one chase cycle on a rolled dense window (values only)."""
+    out, _, _ = _chase_window(window, is_first, b_in=b_in, tw=tw)
+    return out
+
+
+def chase_cycle_ref(windows: jax.Array, is_first: jax.Array, *, b_in: int,
+                    tw: int, with_tape: bool = False):
+    """vmapped oracle over a batch of disjoint windows: (G, H, W).
+
+    ``with_tape=True`` additionally returns the reflector tape slice for the
+    wavefront: ``vs (G, 2, tw+1)`` and ``taus (G, 2)`` (pair axis: right
+    reflector first, then left)."""
+    def fn(w, f):
+        out, (v, tau), (v2, tau2) = _chase_window(w, f, b_in=b_in, tw=tw)
+        return out, jnp.stack([v, v2]), jnp.stack([tau, tau2])
+
+    out, vs, taus = jax.vmap(fn)(windows, is_first)
+    if with_tape:
+        return out, vs, taus
+    return out
 
 
 def hh_block_apply_ref(v: jax.Array, t: jax.Array, c: jax.Array) -> jax.Array:
     """WY blocked reflector apply oracle:  C <- (I - V T V^T) C.
 
     v: (m, k) unit-lower-trapezoidal reflector block, t: (k, k) upper-triangular
-    compact-WY factor, c: (m, ncols).
+    compact-WY factor, c: (m, ncols).  The single-slot view of
+    :func:`tape_apply_ref` — one oracle serves both.
+    """
+    return tape_apply_ref(v[None], t[None], c[None])[0]
+
+
+def tape_apply_ref(v: jax.Array, t: jax.Array, c: jax.Array) -> jax.Array:
+    """Batched compact-WY left apply oracle: per slot s,
+
+        C[s] <- (I - V[s] T[s] V[s]^T) C[s]
+
+    v: (S, m, k), t: (S, k, k), c: (S, m, w).  The tape-replay workhorse
+    (core/transforms.py): stage-1 panels use k = nb blocks, the chase tape
+    uses k = 1 (rank-1 Householder, t = tau).
     """
     acc = jnp.float32 if c.dtype in (jnp.bfloat16, jnp.float16) else c.dtype
     vv, tt, cc = v.astype(acc), t.astype(acc), c.astype(acc)
-    w = vv.T @ cc
-    out = cc - vv @ (tt @ w)
+    w1 = jnp.einsum("smk,smw->skw", vv, cc)
+    out = cc - jnp.einsum("smk,skw->smw", vv, jnp.einsum("skj,sjw->skw", tt, w1))
     return out.astype(c.dtype)
 
 

@@ -11,11 +11,13 @@ per round, queue-fed slots):
   padded-vocab tail is masked at sample time.
 
 * ``SVDEngine`` — spectral serving over the batch-native SVD pipeline.
-  Requests are bucketed by compilation key ``(n, bw, dtype)``; each flush
-  pads one bucket to the config's ``max_batch`` and issues ONE batched
-  pipeline call (``core.svd.svd_batched``), so heavy small-matrix traffic
-  saturates the chase wavefront that a single matrix cannot (paper Eq. 1).
-  Padding keeps shapes static — one compilation per bucket key, ever.
+  Requests are bucketed by compilation key ``(n, bw, dtype, banded,
+  compute_uv)``; each flush pads one bucket to the config's ``max_batch``
+  and issues ONE batched pipeline call (``core.svd.svd_batched``, in
+  reflector-tape mode for ``compute_uv`` buckets), so heavy small-matrix
+  traffic saturates the chase wavefront that a single matrix cannot (paper
+  Eq. 1).  Padding keeps shapes static — one compilation per bucket key,
+  ever.
 """
 
 from __future__ import annotations
@@ -142,18 +144,27 @@ class Engine:
 
 @dataclasses.dataclass
 class SVDRequest:
-    """One spectral query: singular values of a square (or banded) matrix."""
+    """One spectral query: singular values (and optionally vectors) of a
+    square (or banded) matrix."""
     uid: int
     matrix: np.ndarray                         # (n, n); upper-banded if banded
     bw: int = 32                               # stage-1 target / band bandwidth
     banded: bool = False                       # True: skip stage 1
+    compute_uv: bool = False                   # True: full SVD (U, sigma, Vt)
     sigma: np.ndarray | None = None            # (n,) result, descending
+    u: np.ndarray | None = None                # (n, n) left vectors (compute_uv)
+    vt: np.ndarray | None = None               # (n, n) right vectors^T
     done: bool = False
 
     def key(self) -> tuple:
-        """Bucket/compilation key: everything that shapes the pipeline."""
+        """Bucket/compilation key: everything that shapes the pipeline.
+
+        ``compute_uv`` is part of the key — the tape-mode pipeline is a
+        different compiled program (and a values-only request must not pay
+        for a co-bucketed full-SVD one).
+        """
         return (self.matrix.shape[-1], self.bw, np.dtype(self.matrix.dtype).name,
-                self.banded)
+                self.banded, self.compute_uv)
 
 
 class SVDEngine:
@@ -191,7 +202,7 @@ class SVDEngine:
 
     def _cfg_for(self, key: tuple):
         from repro.core import tuning
-        n, bw, dtype, _banded = key
+        n, bw, dtype, _banded, compute_uv = key
         # The engine's max_batch is a CAP; per bucket it is tightened by the
         # Eq.-1 occupancy default so large matrices (whose own wavefront
         # already saturates the chip) are not zero-padded 8x for nothing.
@@ -199,7 +210,8 @@ class SVDEngine:
         return tuning.PipelineConfig.resolve(
             bw=bw, tw=self.config.tw, backend=self.config.backend,
             interpret=self.config.interpret, dtype=np.dtype(dtype), n=n,
-            max_batch=max(1, eff), unroll=self.config.unroll)
+            max_batch=max(1, eff), unroll=self.config.unroll,
+            compute_uv=compute_uv)
 
     def step(self) -> int:
         """Flush the fullest bucket with one batched call; #requests served."""
@@ -213,7 +225,7 @@ class SVDEngine:
         if not self.buckets[key]:
             del self.buckets[key]
 
-        n, _bw, dtype, banded = key
+        n, _bw, dtype, banded, compute_uv = key
         batch = np.zeros((cfg.max_batch, n, n), dtype)       # pad: zero matrices
         for i, r in enumerate(reqs):
             batch[i] = r.matrix
@@ -223,7 +235,12 @@ class SVDEngine:
             # jnp.asarray — serve at the effective precision instead of
             # tripping the config/input dtype-conflict check.
             cfg = dataclasses.replace(cfg, dtype=jnp.dtype(stacked.dtype).name)
-        if banded:
+        u = vt = None
+        if compute_uv:
+            fn = svdmod.banded_svd if banded else svdmod.svd
+            u, sig, vt = fn(stacked, config=cfg, compute_uv=True)
+            u, vt = np.asarray(u), np.asarray(vt)
+        elif banded:
             sig = svdmod.banded_singular_values(stacked, bw=cfg.bw, config=cfg)
         else:
             sig = svdmod.svd_batched(stacked, config=cfg)
@@ -231,6 +248,8 @@ class SVDEngine:
         sig = np.asarray(sig)
         for i, r in enumerate(reqs):
             r.sigma = sig[i]
+            if compute_uv:
+                r.u, r.vt = u[i], vt[i]
             r.done = True
             self.finished.append(r)
         return len(reqs)
