@@ -1,0 +1,96 @@
+"""Chase super-step fusion sweep (DESIGN.md §9): stage-2 time vs fuse depth.
+
+For each (n, bw, tw) shape and fuse depth K the suite measures one stage-2
+reduction (``reduce_stage_packed`` at the stage-head bandwidth) and reports
+
+  * wall time per call (``us_per_call``);
+  * ``cycles_per_s`` — executed chase cycles per second (the cycle count is
+    fuse-invariant, so this is the honest throughput axis);
+  * ``supercycles`` — kernel dispatches on the wavefront clock (the ~K-fold
+    launch/gather saving the fusion buys);
+  * ``speedup`` vs the K = 1 baseline of the same shape.
+
+Full mode adds the end-to-end stage-2 pipeline (the whole bw -> 1 tile-width
+plan via ``bidiagonalize_packed``) at every depth.  Smoke mode runs the
+acceptance shape n=1024, bw=32 on the ref/CPU path — the committed
+``BENCH_stage2.json`` baseline comes from ``run.py --smoke --json``.
+
+  PYTHONPATH=src python -m benchmarks.run --only fusion
+  PYTHONPATH=src python -m benchmarks.run --only fusion --smoke
+  PYTHONPATH=src python benchmarks/fusion.py
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+if __package__ in (None, ""):                 # direct script execution
+    _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _REPO)
+    sys.path.insert(0, os.path.join(_REPO, "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import banded, row, timeit
+
+FULL = dict(shapes=((512, 32, 8), (1024, 32, 8)), depths=(1, 2, 4, 8),
+            iters=2, e2e=True)
+SMOKE = dict(shapes=((1024, 32, 8),), depths=(1, 2, 4), iters=1, e2e=False)
+
+
+def _n_cycles(n: int, b_in: int, tw: int) -> int:
+    """Fuse-invariant count of chase cycles one stage executes."""
+    b_out = b_in - tw
+    return sum((n - 1 - r - b_out) // b_in + 1
+               for r in range(max(n - 1 - b_out, 0)))
+
+
+def run(smoke: bool = False):
+    from repro.core import band as bandmod
+    from repro.core import bulge_chasing as bc
+
+    p = SMOKE if smoke else FULL
+    out = []
+    for n, bw, tw in p["shapes"]:
+        a = banded(n, bw, seed=0, dtype=np.float32)
+        packed = bandmod.pack(jnp.asarray(a), bw, tw)
+        cyc = _n_cycles(n, bw, tw)
+        base_t = None
+        for k in p["depths"]:
+
+            def stage(pk=packed, k=k):
+                return bc.reduce_stage_packed(pk, n=n, b_in=bw, tw=tw,
+                                              backend="ref", fuse=k)
+
+            t = timeit(stage, warmup=1, iters=p["iters"])
+            base_t = t if k == 1 else base_t
+            _, supercycles, g = bc.stage_schedule(n, bw, tw, k)
+            out.append(row(
+                f"fusion/stage/n{n}/bw{bw}/tw{tw}/K{k}", t * 1e6,
+                f"cycles_per_s={cyc / t:.0f};supercycles={supercycles};"
+                f"wavefront={g};speedup={base_t / t:.2f}x"))
+        if not p["e2e"]:
+            continue
+        base_t = None
+        for k in p["depths"]:
+
+            def e2e(pk=packed, k=k):
+                return bc.bidiagonalize_packed(pk, n=n, bw=bw, tw=tw,
+                                               backend="ref", fuse=k)
+
+            t = timeit(e2e, warmup=1, iters=p["iters"])
+            base_t = t if k == 1 else base_t
+            out.append(row(f"fusion/e2e_stage2/n{n}/bw{bw}/tw{tw}/K{k}",
+                           t * 1e6, f"speedup={base_t / t:.2f}x"))
+    return out
+
+
+if __name__ == "__main__":
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    print("name,us_per_call,derived")
+    for line in run(smoke="--smoke" in sys.argv):
+        print(line, flush=True)

@@ -2,9 +2,11 @@
 
 Wall-clock of one batched chase cycle (ref backend, jitted — the XLA-fused
 CPU realization of the kernel math) across (b_in, tw, wavefront width), plus
-the per-window VMEM bytes the Pallas kernel would stage on TPU.  Pallas
-interpret-mode timing is NOT a performance signal (python interpreter), so
-the TPU projection is the roofline entry in EXPERIMENTS.md.
+the per-window VMEM bytes the Pallas kernel would stage on TPU, plus the
+kernel-dispatch launch-overhead probe that motivates the fuse-K super-steps
+(``_launch_overhead``; DESIGN.md §9).  Pallas interpret-mode timing is NOT a
+performance signal (python interpreter), so the TPU projection is the
+roofline entry in EXPERIMENTS.md.
 """
 
 from __future__ import annotations
@@ -17,12 +19,51 @@ from repro.core.tuning import vmem_working_set_bytes
 from repro.kernels import ops
 
 CASES = [(32, 8, 4), (32, 8, 16), (64, 16, 8), (128, 32, 4), (128, 32, 16)]
+SMOKE_CASES = [(32, 8, 4), (64, 16, 8)]
+
+# launch-overhead microbenchmark: (b_in, tw, fuse depths to amortize over)
+LAUNCH_CASES = [(16, 4, (2, 4, 8)), (32, 8, (2, 4, 8))]
+LAUNCH_SMOKE = [(16, 4, (4, 8))]
 
 
-def run() -> list[str]:
+def _launch_overhead(cases) -> list[str]:
+    """Fixed per-dispatch cost vs fused amortization (DESIGN.md §9).
+
+    A single-slot K=1 ``chase_cycle`` call is almost pure dispatch overhead
+    (one tiny window); the fused call retires K cycles per dispatch, so its
+    per-cycle time bounds the overhead a super-step amortizes away.  The
+    derived column reports us/cycle at each depth and the K=1 : fused
+    per-cycle ratio — the CPU-visible analogue of the paper's
+    kernel-launch-sync cost that motivates fusing.
+    """
+    out = []
+    rng = np.random.default_rng(1)
+    for b_in, tw, depths in cases:
+        h, w = b_in + 2 * tw + 1, b_in + tw + 1
+        win = jnp.asarray(rng.standard_normal((1, h, w)), jnp.float32)
+        first = jnp.zeros((1,), bool)
+        t1 = timeit(lambda: ops.chase_cycle(win, first, b_in=b_in, tw=tw,
+                                            backend="ref"),
+                    warmup=2, iters=5)
+        parts = [f"us_per_cycle_K1={t1 * 1e6:.1f}"]
+        for k in depths:
+            wk = k * b_in + tw + 1
+            blk = jnp.asarray(rng.standard_normal((1, h, wk)), jnp.float32)
+            act = jnp.ones((1, k), bool)
+            tk = timeit(lambda blk=blk, act=act, k=k: ops.chase_cycle(
+                blk, first, b_in=b_in, tw=tw, fuse=k, active=act,
+                backend="ref"), warmup=2, iters=5)
+            parts.append(f"us_per_cycle_K{k}={tk / k * 1e6:.1f}")
+            parts.append(f"overhead_ratio_K{k}={t1 * k / tk:.2f}x")
+        out.append(row(f"chase_launch/b{b_in}_tw{tw}", t1 * 1e6,
+                       ";".join(parts)))
+    return out
+
+
+def run(smoke: bool = False) -> list[str]:
     out = []
     rng = np.random.default_rng(0)
-    for b_in, tw, g in CASES:
+    for b_in, tw, g in (SMOKE_CASES if smoke else CASES):
         h, w = b_in + 2 * tw + 1, b_in + tw + 1
         win = jnp.asarray(rng.standard_normal((g, h, w)), jnp.float32)
         first = jnp.zeros((g,), bool)
@@ -34,4 +75,5 @@ def run() -> list[str]:
             f"chase_cycle/b{b_in}_tw{tw}_g{g}", t * 1e6,
             f"vmem_window_B={bytes_win};hbm_traffic_B={traffic};"
             f"annihilated={g * 2 * tw}"))
+    out += _launch_overhead(LAUNCH_SMOKE if smoke else LAUNCH_CASES)
     return out

@@ -1,13 +1,17 @@
 """Benchmark harness: one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig6,vectors] [--smoke] [--list]
+  PYTHONPATH=src python -m benchmarks.run [--only fig6,vectors] [--smoke]
+                                          [--list] [--json PATH]
 
 ``--only`` takes a comma-separated list of EXACT suite names (``--only
 kernels_bench`` no longer also pulls in every suite containing the
 substring); ``--list`` prints the registered suites; ``--smoke`` runs tiny
 shapes — suites that support it are called with ``run(smoke=True)``, the
 rest are skipped with a comment row (used as the non-blocking CI perf
-probe).  Prints ``name,us_per_call,derived`` CSV rows.  The roofline tables
+probe).  Prints ``name,us_per_call,derived`` CSV rows; ``--json PATH``
+additionally writes the same results machine-readably, grouped per suite
+(the committed ``BENCH_stage2.json`` baseline and the CI workflow artifact
+are produced this way).  The roofline tables
 (EXPERIMENTS.md §Roofline) come from the dry-run artifacts instead:
 ``python -m repro.roofline.report`` after ``python -m repro.launch.dryrun``.
 """
@@ -16,7 +20,9 @@ from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import os
+import platform
 import sys
 import time
 
@@ -27,7 +33,7 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 SUITES = ["accuracy", "hyperparams", "occupancy", "scaling", "precision",
-          "kernels_bench", "batched", "vectors"]
+          "kernels_bench", "fusion", "batched", "vectors"]
 
 
 def _supports_smoke(fn) -> bool:
@@ -35,6 +41,11 @@ def _supports_smoke(fn) -> bool:
         return "smoke" in inspect.signature(fn).parameters
     except (TypeError, ValueError):
         return False
+
+
+def _parse_row(line: str) -> dict:
+    name, us, derived = line.split(",", 2)
+    return {"name": name, "us_per_call": float(us), "derived": derived}
 
 
 def main(argv=None) -> None:
@@ -45,6 +56,8 @@ def main(argv=None) -> None:
                     help="tiny shapes; suites without a smoke mode are skipped")
     ap.add_argument("--list", action="store_true", dest="list_suites",
                     help="print registered suite names and exit")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write per-suite results as JSON to PATH")
     args = ap.parse_args(argv)
     if args.list_suites:
         for name in SUITES:
@@ -58,6 +71,13 @@ def main(argv=None) -> None:
             ap.error(f"unknown suite(s) {unknown}; registered: {SUITES}")
         selected = [s for s in SUITES if s in wanted]
     print("name,us_per_call,derived")
+    report = {
+        "smoke": args.smoke,
+        "backend": jax.devices()[0].platform,
+        "jax": jax.__version__,
+        "machine": platform.machine(),
+        "suites": {},
+    }
     for mod_name in selected:
         t0 = time.time()
         mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
@@ -67,7 +87,17 @@ def main(argv=None) -> None:
         lines = mod.run(smoke=True) if args.smoke else mod.run()
         for line in lines:
             print(line, flush=True)
-        print(f"# {mod_name} done in {time.time() - t0:.1f}s", flush=True)
+        elapsed = time.time() - t0
+        print(f"# {mod_name} done in {elapsed:.1f}s", flush=True)
+        report["suites"][mod_name] = {
+            "elapsed_s": round(elapsed, 1),
+            "rows": [_parse_row(l) for l in lines],
+        }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# json written to {args.json}", flush=True)
 
 
 if __name__ == "__main__":

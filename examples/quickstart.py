@@ -74,4 +74,20 @@ print(f"full SVD: max recon err {recon:.2e}, max |U^T U - I| {orth:.2e}, "
       f"sigma bit-identical: {np.array_equal(sigma3, sigma4)}")
 assert recon < 1e-10 and orth < 1e-12
 assert np.array_equal(sigma3, sigma4)
+
+# --- 5. cycle-fused chase super-steps (PipelineConfig.fuse) ------------------
+# fuse=K chases K consecutive cycles of each sweep per kernel dispatch inside
+# one VMEM-resident (H, K*b_in + tw + 1) band block: each cycle costs ~1/K of
+# a contiguous HBM block round trip instead of its own sheared window
+# gather/scatter, launches drop 3*nsweeps -> 2*nsweeps, and numerics are
+# invariant (DESIGN.md §9).  fuse=None asks the VMEM performance model for
+# the deepest super-step that fits (tuning.default_fuse_depth).
+import dataclasses
+fused_cfg = dataclasses.replace(cfg, fuse=4)
+sigma5 = np.asarray(svd_batched(jnp.asarray(stack), config=fused_cfg))
+auto = PipelineConfig.resolve(bw=8, dtype=jnp.float64, n=k, fuse=None)
+print(f"fuse=4 max |sigma - sigma(fuse=1)| = "
+      f"{np.abs(sigma5 - sigma3).max():.2e}; "
+      f"VMEM-model default fuse depth for bw=8: {auto.fuse}")
+assert np.abs(sigma5 - sigma3).max() < 1e-12
 print("OK")

@@ -27,13 +27,15 @@ import dataclasses
 import jax.numpy as jnp
 
 __all__ = [
-    "default_tilewidth", "rows_per_step", "max_concurrent_sweeps",
-    "occupancy_matrix_size", "vmem_working_set_bytes", "stage_plan",
+    "default_tilewidth", "rows_per_step", "sweep_separation",
+    "max_concurrent_sweeps", "occupancy_matrix_size",
+    "vmem_working_set_bytes", "default_fuse_depth", "stage_plan",
     "default_bucket_batch", "ChaseConfig", "PipelineConfig",
 ]
 
 LANE = 128          # TPU vector lane count
 SUBLANE = 8         # TPU sublane count (f32)
+VMEM_BUDGET_BYTES = 16 * 2 ** 20   # per-TensorCore VMEM (v4/v5-class parts)
 
 
 def _bytes(dtype) -> int:
@@ -59,9 +61,46 @@ def rows_per_step(b_in: int, tw: int, dtype=jnp.float32) -> int:
     return min(64, max(SUBLANE, SUBLANE * (rows // SUBLANE)))
 
 
-def max_concurrent_sweeps(n: int, b_in: int) -> int:
-    """Wavefront width (paper: #blocks): ceil(n / (3*CBW - 1)) + 1 slots."""
-    return max(1, -(-n // (3 * b_in - 1)) + 1)
+def sweep_separation(fuse: int = 1) -> int:
+    """Sweep-start separation, in (super-)cycles, for fuse depth K.
+
+    Concurrent fused windows are disjoint iff the pivot stride between
+    adjacent in-flight sweeps, ``sep*K*b_in - 1``, is at least the fused
+    window width ``W_K = K*b_in + tw + 1``.  K = 1 keeps the paper's 3-cycle
+    rule (``3*b_in - 1 >= b_in + tw + 1`` for every valid ``tw <= b_in - 1``
+    — strictly stronger than the bound requires when ``tw <= b_in - 2``, but
+    it is the published schedule and the bit-exact baseline).  For K >= 2 a
+    separation of 2 already suffices unconditionally:
+
+        2*K*b_in - 1 >= K*b_in + tw + 1  <=>  K*b_in >= tw + 2,
+
+    and ``K >= 2, b_in >= tw + 1`` give ``K*b_in >= 2*tw + 2 >= tw + 2``.
+    ``tests/test_batched.py`` asserts the disjointness exhaustively for
+    K in {1, 2, 4, 8}.
+    """
+    assert fuse >= 1, fuse
+    return 3 if fuse == 1 else 2
+
+
+def max_concurrent_sweeps(n: int, b_in: int, fuse: int = 1,
+                          tw: int | None = None) -> int:
+    """Wavefront width (paper: #blocks) for one stage.
+
+    ``fuse=1`` is the paper's Eq.-1 analogue ``ceil(n / (3*CBW - 1)) + 1``
+    (pivot-stride bound).  Fused super-steps advance K cycles per dispatch,
+    so a sweep lives for only ``dur = ceil((j_max + 1)/K)`` super-cycles and
+    slot ``g = js // sep`` never exceeds ``(dur - 1) // sep`` — a much
+    tighter bound than the stride formula when K divides the sweep length
+    down.  The tight bound needs the sweep length, hence ``tw`` (``b_out =
+    b_in - tw`` fixes ``j_max``); it is what keeps the fused wavefront from
+    carrying dead slots whose K windows would be chased and discarded.
+    """
+    if fuse == 1 or tw is None:
+        stride = sweep_separation(fuse) * fuse * b_in - 1
+        return max(1, -(-n // stride) + 1)
+    j_max0 = max((n - 1 - (b_in - tw)) // b_in, 0)
+    dur0 = -(-(j_max0 + 1) // fuse)
+    return max(1, (dur0 - 1) // sweep_separation(fuse) + 1)
 
 
 def occupancy_matrix_size(cbw: int, execution_units: int) -> int:
@@ -69,11 +108,64 @@ def occupancy_matrix_size(cbw: int, execution_units: int) -> int:
     return 3 * cbw * execution_units
 
 
-def vmem_working_set_bytes(b_in: int, tw: int, dtype=jnp.float32) -> int:
-    """One chase window (H x W) + reflectors, as staged in VMEM."""
+def vmem_working_set_bytes(b_in: int, tw: int, dtype=jnp.float32, *,
+                           fuse: int = 1, tape: bool = False) -> int:
+    """Per-slot VMEM working set of one chase super-step (paper §III-C).
+
+    Counts everything one grid step keeps resident while chasing ``fuse``
+    consecutive cycles:
+
+    * the streamed band block ``(H, W_K)``, ``W_K = fuse*b_in + tw + 1``,
+      **x2** for the double-buffered BlockSpec pipeline (Pallas prefetches
+      step i+1's block while step i computes — the TPU analogue of the
+      paper's L1 residency);
+    * for ``fuse > 1``, the in-kernel rolled dense scratch
+      ``(H + W_K - 1, W_K)`` (the shear workspace the fused kernel chases
+      in — see kernels/bulge_chase.py);
+    * one reflector pair per fused cycle;
+    * with ``tape=True``, the double-buffered tape output blocks
+      (``fuse`` pairs of ``(v, tau)`` per slot).
+
+    Monotone in ``fuse`` — the knob ``default_fuse_depth`` searches.
+    """
     h = b_in + 2 * tw + 1
-    w = b_in + tw + 1
-    return (h * w + 2 * (tw + 1)) * _bytes(dtype)
+    wk = fuse * b_in + tw + 1
+    words = 2 * h * wk                       # double-buffered streamed block
+    if fuse > 1:
+        words += (h + wk - 1) * wk           # rolled dense scratch (shear)
+    words += fuse * 2 * (tw + 1)             # reflector pairs
+    if tape:
+        words += 2 * fuse * 2 * (tw + 2)     # double-buffered (v, tau) blocks
+    return words * _bytes(dtype)
+
+
+def default_fuse_depth(b_in: int, tw: int, dtype=jnp.float32, *,
+                       budget_bytes: int | None = None, tape: bool = False,
+                       cap: int = 8) -> int:
+    """Largest fuse depth K whose super-step working set fits the per-core
+    VMEM budget (the paper's performance-model-guided tuning, §III-D,
+    applied to the fuse knob).
+
+    ``budget_bytes`` defaults to half of ``VMEM_BUDGET_BYTES`` — the other
+    half is headroom for Pallas pipeline state and compiler spills.  Falls
+    back to K = 1 when even K = 2 does not fit (the K = 1 path streams
+    pre-rolled windows and needs no dense scratch).
+
+    Scope: the model maximizes fast-memory residency per dispatch (the
+    paper's axis), not wall-clock on a given host — launches stop falling
+    past K = 2 (2*nsweeps super-cycles) while per-launch block width keeps
+    growing, so on the CPU ref path the measured optimum can be a shallower
+    K than the deepest that fits (see BENCH_stage2.json: K=2 beats K=4 at
+    n=1024, bw=32).  Treat the result as the residency-feasible ceiling and
+    ``benchmarks/fusion.py`` as the measured curve to pick from.
+    """
+    budget = VMEM_BUDGET_BYTES // 2 if budget_bytes is None else budget_bytes
+    best = 1
+    for cand in range(2, max(cap, 1) + 1):
+        if vmem_working_set_bytes(b_in, tw, dtype, fuse=cand,
+                                  tape=tape) <= budget:
+            best = cand
+    return best
 
 
 def stage_plan(bw: int, tw: int) -> tuple[tuple[int, int], ...]:
@@ -144,6 +236,7 @@ class PipelineConfig:
     max_batch: int = 8          # serve bucket capacity (leading batch axis B)
     unroll: int = 1             # fori_loop unroll of the wavefront stage
     compute_uv: bool = False    # full SVD: record + replay reflector tapes
+    fuse: int = 1               # chase super-step depth K (cycles per launch)
 
     @property
     def plan(self) -> tuple[tuple[int, int], ...]:
@@ -166,13 +259,17 @@ class PipelineConfig:
                 backend: str = "auto", interpret: bool | None = None,
                 dtype=jnp.float32, n: int | None = None,
                 max_batch: int | None = None, unroll: int = 1,
-                compute_uv: bool = False) -> "PipelineConfig":
+                compute_uv: bool = False,
+                fuse: int | None = 1) -> "PipelineConfig":
         """Resolve every knob to a concrete value.
 
         ``backend="auto"`` and ``interpret=None`` are resolved by the backend
         registry (pallas on TPU, ref elsewhere; interpret off-TPU only);
         ``tw=None`` falls back to the cache-line/lane heuristic;
-        ``max_batch=None`` uses the Eq.-1 occupancy deficit for (n, bw).
+        ``max_batch=None`` uses the Eq.-1 occupancy deficit for (n, bw);
+        ``fuse=None`` asks the VMEM model for the deepest super-step that
+        fits (``default_fuse_depth``), ``fuse=1`` (the default) keeps the
+        paper's one-launch-per-cycle schedule.
         ``bw`` is clamped to >= 1 (bw = 0 — e.g. a 1x1 problem — would zero
         the stage-1 panel width; a bw-1 "band" is already bidiagonal, so
         stage 2 is a no-op pass-through either way).
@@ -187,9 +284,11 @@ class PipelineConfig:
         backend, interpret = ops.resolve_backend(backend, interpret)
         if max_batch is None:
             max_batch = default_bucket_batch(n, bw) if n else 8
+        if fuse is None:
+            fuse = default_fuse_depth(bw, tw, dtype, tape=compute_uv)
         return cls(bw=bw, tw=tw, backend=backend, interpret=interpret,
                    dtype=jnp.dtype(dtype).name, max_batch=max_batch,
-                   unroll=unroll, compute_uv=compute_uv)
+                   unroll=unroll, compute_uv=compute_uv, fuse=max(int(fuse), 1))
 
     @classmethod
     def of(cls, config: "PipelineConfig | None", *, bw: int | None = None,

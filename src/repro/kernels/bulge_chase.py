@@ -6,14 +6,26 @@ Memory mapping (GPU -> TPU, DESIGN.md §2):
 * reflector in shared memory (L1)   -> reflector in VMEM-resident window block
 * TPB rows held in registers        -> row tiles materialized into VREGs from
                                        the VMEM window by the vector unit
-* kernel-launch sync between cycles -> sequential grid steps + one
-                                       ``pallas_call`` per global cycle
+* kernel-launch sync between cycles -> one ``pallas_call`` per K-cycle
+                                       super-step (``chase_superstep_pallas``;
+                                       K=1 is ``chase_cycle_pallas``)
 
 Each grid step owns one *rolled dense window* (H, W) of the packed band
 storage, H = b_in + 2*tw + 1, W = b_in + tw + 1 — the "1 + BW + TW" working
 set of the paper, staged HBM -> VMEM by the BlockSpec pipeline (double-
 buffered by Pallas, the TPU analogue of the paper's L1 residency), processed
 entirely in VMEM, and written back.
+
+Fused super-steps (DESIGN.md §9): with fuse depth K >= 2 a grid step owns
+the CONTIGUOUS band-storage block (H, K*b_in + tw + 1) covering K
+consecutive cycles of its sweep.  The diagonal shear that rolls band
+storage into dense windows — done host-side per cycle at K=1 — moves inside
+the kernel: one relayout (transpose + pad + reshape, the flatten shear)
+builds a VMEM-resident dense workspace, the K cycles chase at static
+offsets reusing the tw+1-column overlap between consecutive windows without
+ever leaving VMEM, and one inverse relayout writes the block back.  HBM
+sees one contiguous block load + store per K cycles instead of K sheared
+gather/scatter round trips.
 
 The kernel is batch-oblivious: a window neither knows nor cares which matrix
 it came from, so the batch-native pipeline (DESIGN.md §4) simply flattens a
@@ -32,7 +44,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["chase_cycle_pallas"]
+__all__ = ["chase_cycle_pallas", "chase_superstep_pallas"]
 
 
 def _reflector_in_kernel(x, acc):
@@ -49,15 +61,16 @@ def _reflector_in_kernel(x, acc):
     return v, tau, jnp.where(safe, beta, alpha)
 
 
-def _chase_kernel(first_ref, win_ref, out_ref, *refs, b_in: int, tw: int):
-    # refs: optionally (vs_ref, taus_ref) when the reflector tape is recorded.
-    vs_ref, taus_ref = refs if refs else (None, None)
+def _chase_window_vmem(win, first, *, b_in: int, tw: int):
+    """One chase cycle on a VMEM-resident rolled dense window (H, W).
+
+    Returns ``(win, (v, tau), (v2, tau2))`` — shared by the K=1 kernel and
+    every fused cycle of the super-step kernel, so fusing changes data
+    movement only, never an arithmetic operation.
+    """
     h = b_in + 2 * tw + 1
-    w = b_in + tw + 1
-    dt = win_ref.dtype
+    dt = win.dtype
     acc = jnp.float32 if dt in (jnp.bfloat16, jnp.float16) else dt
-    win = win_ref[0]                                   # (H, W) in VMEM
-    first = first_ref[0, 0] != 0
 
     # ---- right reflector: annihilate the TW-element row bulge ------------
     # overhang row: y = tw (steady) or y = 2*tw (sweep's first cycle); rows in
@@ -87,7 +100,17 @@ def _chase_kernel(first_ref, win_ref, out_ref, *refs, b_in: int, tw: int):
     colfix = jnp.zeros((tw + 1,), acc).at[0].set(beta2)
     blk2 = blk2.at[:, 0].set(jnp.where(tau2 != 0, colfix, blk2[:, 0]))
     win = win.at[y0:, :].set(blk2.astype(dt))
+    return win, (v, tau), (v2, tau2)
 
+
+def _chase_kernel(first_ref, win_ref, out_ref, *refs, b_in: int, tw: int):
+    # refs: optionally (vs_ref, taus_ref) when the reflector tape is recorded.
+    vs_ref, taus_ref = refs if refs else (None, None)
+    dt = win_ref.dtype
+    win = win_ref[0]                                   # (H, W) in VMEM
+    first = first_ref[0, 0] != 0
+    win, (v, tau), (v2, tau2) = _chase_window_vmem(win, first, b_in=b_in,
+                                                   tw=tw)
     out_ref[0] = win
     if vs_ref is not None:
         # Reflector tape (DESIGN.md §8): the pair this cycle applied, written
@@ -131,6 +154,114 @@ def chase_cycle_pallas(windows: jax.Array, is_first: jax.Array, *, b_in: int,
         input_output_aliases={1: 0},
         interpret=interpret,
     )(first, windows)
+    if with_tape:
+        out, vs, taus = res
+        return out, vs, taus[..., 0]
+    return res[0]
+
+
+# ---------------------------------------------------------------------------
+# Fuse-depth-K super-steps (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def _shear_roll(block):
+    """Band block (H, WK) -> VMEM dense workspace (H + WK - 1, WK).
+
+    ``dense[y, w] = rev[y - w, w]`` with ``rev = block[::-1]`` — the column
+    shear that aligns matrix rows with workspace rows.  Implemented as the
+    *flatten shear*: transpose, pad WK zero columns, and reinterpret the
+    flat buffer at row pitch ``H + WK - 1`` — each row lands shifted by its
+    index, zeros fill the off-parallelogram cells.  On TPU this lowers to
+    relayout + reshape (no gather); the workspace height ``H + WK - 1``
+    makes the shear a pure permutation, so roll -> unroll round-trips every
+    block cell bit-exactly.
+    """
+    h, wk = block.shape
+    hc = h + wk - 1
+    bt = block[::-1].T                         # (WK, H): row w = reversed col w
+    btp = jnp.pad(bt, ((0, 0), (0, wk)))       # (WK, H + WK)
+    return btp.reshape(-1)[: wk * hc].reshape(wk, hc).T
+
+
+def _shear_unroll(dense, h):
+    """Inverse of :func:`_shear_roll`: (H + WK - 1, WK) -> (H, WK)."""
+    hc, wk = dense.shape
+    flat = jnp.pad(dense.T.reshape(-1), (0, wk))
+    x = flat.reshape(wk, hc + 1)[:, :h]        # x[w, r] = dense[r + w, w]
+    return x[:, ::-1].T
+
+
+def _chase_superstep_kernel(first_ref, act_ref, blk_ref, out_ref, *refs,
+                            b_in: int, tw: int, fuse: int):
+    # refs: optionally (vs_ref, taus_ref) when the reflector tape is recorded.
+    vs_ref, taus_ref = refs if refs else (None, None)
+    h = b_in + 2 * tw + 1
+    w = b_in + tw + 1
+    dt = blk_ref.dtype
+    block = blk_ref[0]                                 # (H, WK) in VMEM
+    first = first_ref[0, 0] != 0
+    dense = _shear_roll(block)                         # stays in VMEM
+    vs, taus = [], []
+    for i in range(fuse):
+        # cycle i's window sits at static offset (i*b_in, i*b_in): the
+        # tw+1-column overlap with cycle i-1's window is already updated in
+        # the workspace — the residency the host round trip threw away.
+        act = act_ref[0, i] != 0
+        win = dense[i * b_in:i * b_in + h, i * b_in:i * b_in + w]
+        new, (v, tau), (v2, tau2) = _chase_window_vmem(
+            win, jnp.logical_and(first, i == 0), b_in=b_in, tw=tw)
+        new = jnp.where(act, new, win)
+        dense = dense.at[i * b_in:i * b_in + h, i * b_in:i * b_in + w].set(new)
+        vs.append(jnp.stack([v.astype(dt), v2.astype(dt)]))
+        taus.append(jnp.stack([tau, tau2]).astype(dt)[:, None])
+    out_ref[0] = _shear_unroll(dense, h)
+    if vs_ref is not None:
+        vs_ref[0] = jnp.stack(vs)                      # (fuse, 2, tw+1)
+        taus_ref[0] = jnp.stack(taus)                  # (fuse, 2, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("b_in", "tw", "fuse",
+                                             "interpret", "with_tape"))
+def chase_superstep_pallas(blocks: jax.Array, is_first: jax.Array,
+                           active: jax.Array, *, b_in: int, tw: int,
+                           fuse: int, interpret: bool = False,
+                           with_tape: bool = False):
+    """blocks: (G, H, WK) disjoint contiguous band blocks, WK = fuse*b_in +
+    tw + 1; is_first: (G,) bool (fused cycle 0 is its sweep's first);
+    active: (G, fuse) bool prefix mask of live cycles per slot.
+
+    One grid step = one K-cycle super-step of one sweep, entirely
+    VMEM-resident.  ``with_tape=True`` additionally returns the super-step's
+    reflector tape slice ``(vs (G, fuse, 2, tw+1), taus (G, fuse, 2))``.
+    """
+    g, h, wk = blocks.shape
+    assert h == b_in + 2 * tw + 1 and wk == fuse * b_in + tw + 1, (
+        blocks.shape, b_in, tw, fuse)
+    first = is_first.astype(jnp.int32).reshape(g, 1)
+    act = active.astype(jnp.int32).reshape(g, fuse)
+    kern = functools.partial(_chase_superstep_kernel, b_in=b_in, tw=tw,
+                             fuse=fuse)
+    out_shape = [jax.ShapeDtypeStruct(blocks.shape, blocks.dtype)]
+    out_specs = [pl.BlockSpec((1, h, wk), lambda i: (i, 0, 0))]
+    if with_tape:
+        out_shape += [
+            jax.ShapeDtypeStruct((g, fuse, 2, tw + 1), blocks.dtype),
+            jax.ShapeDtypeStruct((g, fuse, 2, 1), blocks.dtype)]
+        out_specs += [pl.BlockSpec((1, fuse, 2, tw + 1), lambda i: (i, 0, 0, 0)),
+                      pl.BlockSpec((1, fuse, 2, 1), lambda i: (i, 0, 0, 0))]
+    res = pl.pallas_call(
+        kern,
+        out_shape=tuple(out_shape),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),         # is_first scalar
+            pl.BlockSpec((1, fuse), lambda i: (i, 0)),      # active mask
+            pl.BlockSpec((1, h, wk), lambda i: (i, 0, 0)),  # band block in VMEM
+        ],
+        out_specs=tuple(out_specs),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(first, act, blocks)
     if with_tape:
         out, vs, taus = res
         return out, vs, taus[..., 0]

@@ -43,7 +43,10 @@ def register_backend(name: str, **impls: Callable) -> None:
     """Register (or extend) a backend: op name -> impl.
 
     Every impl takes the op's arrays plus its static kwargs and an
-    ``interpret`` kwarg (ignored by non-Pallas backends).
+    ``interpret`` kwarg (ignored by non-Pallas backends).  ``chase_cycle``
+    impls additionally always receive ``with_tape`` (record the reflector
+    tape, static), ``fuse`` (super-step depth, static) and ``active`` (the
+    per-fused-cycle mask operand, None at fuse=1).
     """
     _REGISTRY.setdefault(name, {}).update(impls)
 
@@ -88,11 +91,18 @@ def _resolve(backend: str, interpret: bool | None, config) -> tuple[str, bool]:
 
 # ---- built-in "ref" (pure jnp; interpret flag ignored) ---------------------
 
+def _ref_chase(windows, is_first, *, b_in, tw, with_tape, interpret, fuse=1,
+               active=None):
+    if fuse == 1:
+        return _ref.chase_cycle_ref(windows, is_first, b_in=b_in, tw=tw,
+                                    with_tape=with_tape)
+    return _ref.chase_superstep_ref(windows, is_first, active, b_in=b_in,
+                                    tw=tw, fuse=fuse, with_tape=with_tape)
+
+
 register_backend(
     "ref",
-    chase_cycle=lambda windows, is_first, *, b_in, tw, with_tape, interpret:
-        _ref.chase_cycle_ref(windows, is_first, b_in=b_in, tw=tw,
-                             with_tape=with_tape),
+    chase_cycle=_ref_chase,
     hh_block_apply=lambda v, t, c, *, block_cols, interpret:
         _ref.hh_block_apply_ref(v, t, c),
     tape_apply=lambda v, t, c, *, block_cols, interpret:
@@ -104,11 +114,17 @@ register_backend(
 
 # ---- built-in "pallas" (lazy kernel imports keep CPU-only paths light) -----
 
-def _pallas_chase(windows, is_first, *, b_in, tw, with_tape, interpret):
+def _pallas_chase(windows, is_first, *, b_in, tw, with_tape, interpret,
+                  fuse=1, active=None):
     from repro.kernels import bulge_chase
-    return bulge_chase.chase_cycle_pallas(windows, is_first, b_in=b_in, tw=tw,
-                                          interpret=interpret,
-                                          with_tape=with_tape)
+    if fuse == 1:
+        return bulge_chase.chase_cycle_pallas(windows, is_first, b_in=b_in,
+                                              tw=tw, interpret=interpret,
+                                              with_tape=with_tape)
+    return bulge_chase.chase_superstep_pallas(windows, is_first, active,
+                                              b_in=b_in, tw=tw, fuse=fuse,
+                                              interpret=interpret,
+                                              with_tape=with_tape)
 
 
 def _pallas_hh(v, t, c, *, block_cols, interpret):
@@ -139,24 +155,35 @@ register_backend("pallas", chase_cycle=_pallas_chase, hh_block_apply=_pallas_hh,
 
 @functools.partial(jax.jit,
                    static_argnames=("b_in", "tw", "backend", "interpret",
-                                    "config", "with_tape"))
+                                    "config", "with_tape", "fuse"))
 def chase_cycle(windows: jax.Array, is_first: jax.Array, *, b_in: int, tw: int,
                 backend: str = "auto", interpret: bool | None = None,
-                config=None, with_tape: bool = False):
-    """Process one wavefront of bulge-chase cycles.
+                config=None, with_tape: bool = False, fuse: int = 1,
+                active: jax.Array | None = None):
+    """Process one wavefront of bulge-chase (super-)cycles.
 
-    windows: (G, H, W) rolled dense windows (disjoint); is_first: (G,) bool.
-    With a leading batch axis folded in, G = B * G_matrix — independent
-    problems simply widen the wavefront (one fused call either way).
+    ``fuse=1`` (default): windows: (G, H, W) rolled dense windows
+    (disjoint); is_first: (G,) bool.  With a leading batch axis folded in,
+    G = B * G_matrix — independent problems simply widen the wavefront (one
+    fused call either way).
 
-    ``with_tape=True`` returns ``(windows, vs (G, 2, tw+1), taus (G, 2))``:
-    the reflector-tape slice for this wavefront (right reflector at pair
-    index 0, left at 1), recorded alongside the identical window update.
+    ``fuse=K >= 2`` (super-steps, DESIGN.md §9): the operand is instead the
+    wavefront's CONTIGUOUS band-storage blocks (G, H, K*b_in + tw + 1) —
+    K consecutive chase windows per slot, rolled to dense form inside the
+    kernel — plus ``active`` (G, K), the per-fused-cycle liveness prefix
+    mask.  Each slot chases its K cycles sequentially in fast memory, so a
+    dispatch retires K times the cycles of a K=1 call.
+
+    ``with_tape=True`` returns ``(windows, vs, taus)`` — the reflector-tape
+    slice for this wavefront (right reflector at pair index 0, left at 1),
+    recorded alongside the identical window update; shapes
+    ``(G, 2, tw+1)``/``(G, 2)`` at fuse=1 and ``(G, K, 2, tw+1)``/
+    ``(G, K, 2)`` fused.
     """
     backend, interpret = _resolve(backend, interpret, config)
     return _impl("chase_cycle", backend)(windows, is_first, b_in=b_in, tw=tw,
-                                         with_tape=with_tape,
-                                         interpret=interpret)
+                                         with_tape=with_tape, fuse=fuse,
+                                         active=active, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "interpret",

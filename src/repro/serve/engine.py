@@ -211,7 +211,7 @@ class SVDEngine:
             bw=bw, tw=self.config.tw, backend=self.config.backend,
             interpret=self.config.interpret, dtype=np.dtype(dtype), n=n,
             max_batch=max(1, eff), unroll=self.config.unroll,
-            compute_uv=compute_uv)
+            compute_uv=compute_uv, fuse=self.config.fuse)
 
     def step(self) -> int:
         """Flush the fullest bucket with one batched call; #requests served."""

@@ -49,6 +49,27 @@ def test_wavefront_windows_pairwise_disjoint(n, b_in, tw):
             assert (np.diff(ps) >= W).all(), (t, ps, W)
 
 
+@pytest.mark.parametrize("fuse", [1, 2, 4, 8])
+@pytest.mark.parametrize("n,b_in,tw", SCHED_CASES)
+def test_fused_wavefront_windows_pairwise_disjoint(n, b_in, tw, fuse):
+    """Generalized (fuse-K) schedule, DESIGN.md §9: every super-cycle's
+    active slots own pairwise-disjoint FUSED windows — base-pivot stride
+    >= W_K = K*b_in + tw + 1, so the contiguous column-block scatter is
+    race-free.  K=1 degenerates to the 3-cycle rule proven above."""
+    nsweeps, total, G = bc.stage_schedule(n, b_in, tw, fuse)
+    if nsweeps == 0:
+        return
+    WK = fuse * b_in + tw + 1
+    sep = tuning.sweep_separation(fuse)
+    assert sep * fuse * b_in - 1 >= WK      # the schedule's design inequality
+    g = np.arange(G)
+    for t in range(total):
+        _, _, p, active, _ = bc.chase_cycle_indices(t, g, n, b_in, tw, fuse)
+        ps = np.sort(np.asarray(p)[np.asarray(active)])
+        if len(ps) > 1:
+            assert (np.diff(ps) >= WK).all(), (t, ps, WK)
+
+
 @pytest.mark.parametrize("n", [8, 16, 33, 57, 100, 200])
 @pytest.mark.parametrize("b_in", [2, 4, 8, 16])
 def test_stage_schedule_concurrency_matches_tuning(n, b_in):
