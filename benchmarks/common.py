@@ -1,11 +1,15 @@
-"""Shared benchmark utilities: timing, banded matrix generation, CSV rows."""
+"""Shared benchmark utilities: timing, banded matrix generation, CSV rows.
+
+Timing delegates to ``repro.autotune.measure.measure_seconds`` — the one
+blocking/jit-warmup/median-of-k path shared with the autotuner, so the
+hand-rolled sweeps and the on-device search compare like with like.
+"""
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
-import jax
+
+from repro.autotune.measure import measure_seconds
 
 
 def banded(n: int, bw: int, seed: int = 0, dtype=np.float64) -> np.ndarray:
@@ -29,15 +33,9 @@ def synthetic_spectrum(n: int, profile: str, seed: int = 0):
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall seconds of fn(*args) (jax-blocking)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    return sorted(ts)[len(ts) // 2]
+    """Median wall seconds of fn(*args) (jax-blocking); the autotuner's
+    ``measure_seconds`` under the historical benchmark-suite name."""
+    return measure_seconds(fn, *args, warmup=warmup, iters=iters)
 
 
 def row(name: str, us: float, derived: str = "") -> str:

@@ -40,14 +40,8 @@ FULL = dict(shapes=((512, 32, 8), (1024, 32, 8)), depths=(1, 2, 4, 8),
 SMOKE = dict(shapes=((1024, 32, 8),), depths=(1, 2, 4), iters=1, e2e=False)
 
 
-def _n_cycles(n: int, b_in: int, tw: int) -> int:
-    """Fuse-invariant count of chase cycles one stage executes."""
-    b_out = b_in - tw
-    return sum((n - 1 - r - b_out) // b_in + 1
-               for r in range(max(n - 1 - b_out, 0)))
-
-
 def run(smoke: bool = False):
+    from repro.autotune.model import total_chase_cycles
     from repro.core import band as bandmod
     from repro.core import bulge_chasing as bc
 
@@ -56,7 +50,7 @@ def run(smoke: bool = False):
     for n, bw, tw in p["shapes"]:
         a = banded(n, bw, seed=0, dtype=np.float32)
         packed = bandmod.pack(jnp.asarray(a), bw, tw)
-        cyc = _n_cycles(n, bw, tw)
+        cyc = total_chase_cycles(n, bw, tw)
         base_t = None
         for k in p["depths"]:
 

@@ -2,11 +2,17 @@
 
 The paper's knobs map to (DESIGN.md §2): inner tilewidth TW (dominant),
 rows-per-step (TPB) and max concurrent blocks (wavefront width, fixed by the
-schedule here).  We sweep TW and report:
+schedule here).  The sweep runs on the autotuner's shared timing path
+(``repro.autotune.measure.time_stage2`` — the same harness the on-device
+search uses, DESIGN.md §11) and reports per TW:
 
   * wall runtime of the jitted wavefront stage (CPU; work  traffic);
   * runtime / TW — the paper's "configurations with half the tilewidth run
     twice as often" normalization (Table III bold-face criterion);
+  * the analytic cost model's prediction for the same configuration
+    (``repro.autotune.model.stage_cost``) — eyeballing this column against
+    the measured one is the sweep-level view of the autotuner's
+    predicted-vs-measured validation table;
   * the modeled VMEM working set per chase window (what the TPU kernel
     stages), and the number of cycles (kernel launches).
 """
@@ -15,8 +21,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from benchmarks.common import banded, row, timeit
-from repro.core import band as bandmod
+from benchmarks.common import row
+from repro.autotune import measure, model
 from repro.core import bulge_chasing as bc
 from repro.core.tuning import vmem_working_set_bytes
 
@@ -26,17 +32,19 @@ TWS = [1, 2, 4, 8, 16, 31]
 
 def run() -> list[str]:
     out = []
-    a = banded(N, BW, seed=1, dtype="float32")
+    profile = model.profile_for()
     for tw in TWS:
-        packed = bandmod.pack(jnp.asarray(a), BW, tw)
-        fn = lambda p, tw=tw: bc.reduce_stage_packed(p, n=N, b_in=BW, tw=tw,
-                                                     backend="ref")
-        t = timeit(fn, packed, warmup=1, iters=3)
+        t = measure.time_stage2(N, BW, tw=tw, backend="ref",
+                                dtype=jnp.float32, full=False, seed=1,
+                                warmup=1, iters=3)
+        pred = model.stage_cost(N, BW, tw, profile=profile)
         nsweeps, cycles, conc = bc.stage_schedule(N, BW, tw)
         vmem = vmem_working_set_bytes(BW, tw, jnp.float32)
         stages_needed = -(-(BW - 1) // tw)
         out.append(row(
             f"fig4/tw{tw}", t * 1e6,
-            f"t_per_tw_us={t * 1e6 / tw:.1f};stages_to_bidiag={stages_needed};"
+            f"t_per_tw_us={t * 1e6 / tw:.1f};"
+            f"model_us={pred.seconds * 1e6:.1f};"
+            f"stages_to_bidiag={stages_needed};"
             f"cycles={cycles};concurrency={conc};vmem_window_B={vmem}"))
     return out

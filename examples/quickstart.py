@@ -91,3 +91,28 @@ print(f"fuse=4 max |sigma - sigma(fuse=1)| = "
       f"VMEM-model default fuse depth for bw=8: {auto.fuse}")
 assert np.abs(sigma5 - sigma3).max() < 1e-12
 print("OK")
+
+# --- 6. hardware-aware autotuning (DESIGN.md §11) ----------------------------
+# The closed-form defaults above are a guess about this host; the autotuner
+# measures the truth.  The analytic cost model ranks the (tw, fuse, batch)
+# grid, only the top-K (plus the static default) are timed, and the winner is
+# persisted to a JSON cache keyed by (device, n, bw, dtype, uv, backend) —
+# which resolve(autotune=True) then consults.  CLI equivalent:
+#   python -m repro.autotune --shapes n=64:bw=8 --backend ref
+import os
+import tempfile
+from repro.autotune import cache as at_cache, model as at_model, run_search
+
+cache_file = os.path.join(tempfile.mkdtemp(), "autotune.json")
+res = run_search(64, 8, backend="ref", top_k=2, fuses=(1, 2), iters=1)
+print(res.table())
+at_cache.store(res.to_entry(), device_kind=at_model.device_kind(), n=64,
+               bw=8, dtype="float32", compute_uv=False, backend="ref",
+               path=cache_file)
+tuned = PipelineConfig.resolve(n=64, bw=8, backend="ref", autotune=True,
+                               autotune_cache=cache_file)
+assert (tuned.tw, tuned.fuse) == (res.best.tw, res.best.fuse)
+assert res.best.measured_s <= res.default.measured_s   # beats or ties default
+print(f"tuned config for n=64, bw=8 on this host: tw={tuned.tw} "
+      f"fuse={tuned.fuse} max_batch={tuned.max_batch}")
+print("OK")

@@ -1,0 +1,106 @@
+"""Autotuner CLI: tune a shape list, print the model-validation table,
+persist the winners to the tuned-config cache.
+
+  PYTHONPATH=src python -m repro.autotune --shapes n=512:bw=32 --backend ref
+  PYTHONPATH=src python -m repro.autotune \\
+      --shapes n=256:bw=16,n=512:bw=32 --backend ref --top-k 3 --iters 2
+
+Each ``--shapes`` item is ``n=<int>:bw=<int>``.  The winning
+``(tw, fuse, max_batch)`` per shape is merged into the cache at
+``--cache`` / ``$REPRO_AUTOTUNE_CACHE`` / the XDG default, keyed by
+``(device_kind, n, bw, dtype, compute_uv, backend)`` — exactly the key
+``PipelineConfig.resolve(autotune=True)`` then looks up.  ``--no-store``
+runs the search and table without touching the cache.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax.numpy as jnp
+
+from repro.autotune import cache as cache_mod
+from repro.autotune import model as model_mod
+from repro.autotune import search as search_mod
+from repro.kernels import ops
+
+
+def parse_shapes(spec: str) -> list[tuple[int, int]]:
+    """"n=512:bw=32,n=256:bw=16" -> [(512, 32), (256, 16)]."""
+    shapes = []
+    for item in spec.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        fields = dict(kv.split("=", 1) for kv in item.split(":"))
+        try:
+            shapes.append((int(fields["n"]), int(fields["bw"])))
+        except (KeyError, ValueError) as e:
+            raise SystemExit(f"bad --shapes item {item!r} "
+                             f"(want n=<int>:bw=<int>): {e}")
+    if not shapes:
+        raise SystemExit("--shapes parsed to nothing")
+    return shapes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.autotune",
+        description="Tune (tw, fuse, batch) per shape; persist the winners.")
+    ap.add_argument("--shapes", required=True,
+                    help="comma list of n=<int>:bw=<int> items")
+    ap.add_argument("--backend", default="auto",
+                    help="kernel registry key (auto/ref/pallas)")
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--compute-uv", action="store_true",
+                    help="tune the tape-mode (full SVD) pipeline")
+    ap.add_argument("--top-k", type=int, default=3,
+                    help="measured candidates per shape (model-ranked)")
+    ap.add_argument("--batches", default="1",
+                    help="comma list of batch sizes to include in the grid")
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--iters", type=int, default=1,
+                    help="timed repetitions per candidate (median)")
+    ap.add_argument("--cache", default="",
+                    help=f"cache path (default: ${cache_mod.ENV_VAR} or "
+                         f"{cache_mod.cache_path()})")
+    ap.add_argument("--no-store", action="store_true",
+                    help="print the table only; do not write the cache")
+    args = ap.parse_args(argv)
+
+    dtype = jnp.dtype(args.dtype)
+    backend, _ = ops.resolve_backend(args.backend)
+    try:
+        batches = tuple(sorted({int(b) for b in args.batches.split(",")
+                                if b.strip()}))
+    except ValueError as e:
+        raise SystemExit(f"bad --batches {args.batches!r} "
+                         f"(want a comma list of ints): {e}")
+    if not batches or min(batches) < 1:
+        raise SystemExit(f"bad --batches {args.batches!r}: need at least "
+                         f"one batch size >= 1")
+    path = args.cache or None
+    kind = model_mod.device_kind()
+    prof = model_mod.profile_for(kind)
+    print(f"# autotune device={kind} profile={prof.device_kind} "
+          f"backend={backend} dtype={dtype.name}", flush=True)
+
+    for n, bw in parse_shapes(args.shapes):
+        res = search_mod.search(n, bw, dtype=dtype, backend=backend,
+                                compute_uv=args.compute_uv,
+                                top_k=args.top_k, batches=batches,
+                                profile=prof, warmup=args.warmup,
+                                iters=args.iters)
+        print(res.table(), flush=True)
+        if args.no_store:
+            continue
+        dest = cache_mod.store(res.to_entry(), device_kind=kind, n=n, bw=bw,
+                               dtype=dtype.name, compute_uv=args.compute_uv,
+                               backend=backend, path=path)
+        print(f"# cached {res.best.label()} -> {dest}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,121 @@
+"""Persistent tuned-config cache: one JSON file, atomic writes.
+
+Entries are keyed by everything that shifts the optimum —
+``(device_kind, n, bw, dtype, compute_uv, backend)`` — and hold the tuned
+knobs ``(tw, fuse, max_batch)`` plus the provenance needed to audit them
+(measured/predicted times, tuner version, jax version, timestamp).
+``PipelineConfig.resolve(autotune=True)`` looks entries up and falls back
+to the analytic defaults on a miss; ``python -m repro.autotune`` writes
+them.
+
+The cache location is ``$REPRO_AUTOTUNE_CACHE`` when set, else
+``~/.cache/repro-autotune/cache.json`` (``$XDG_CACHE_HOME`` honored).
+Writes are atomic (tempfile + ``os.replace`` in the destination directory)
+and read-modify-write merges, so concurrent tuners lose at worst one
+entry, never the file.  A corrupt or truncated cache file reads as empty —
+tuning degrades to the analytic defaults instead of crashing the caller.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+__all__ = ["ENV_VAR", "SCHEMA_VERSION", "cache_path", "make_key",
+           "load", "lookup", "store"]
+
+ENV_VAR = "REPRO_AUTOTUNE_CACHE"
+SCHEMA_VERSION = 1
+
+
+def cache_path(path: str | None = None) -> str:
+    """Resolve the cache file path: explicit arg > env var > XDG default."""
+    if path:
+        return path
+    env = os.environ.get(ENV_VAR, "")
+    if env:
+        return env
+    base = os.environ.get("XDG_CACHE_HOME",
+                          os.path.join(os.path.expanduser("~"), ".cache"))
+    return os.path.join(base, "repro-autotune", "cache.json")
+
+
+def make_key(*, device_kind: str, n: int, bw: int, dtype: str,
+             compute_uv: bool, backend: str) -> str:
+    """Flat string key (JSON objects can't key on tuples)."""
+    return (f"device={device_kind}|n={int(n)}|bw={int(bw)}|dtype={dtype}"
+            f"|uv={int(bool(compute_uv))}|backend={backend}")
+
+
+def load(path: str | None = None) -> dict:
+    """The whole cache as a dict (``{"version": .., "entries": {key: ..}}``);
+    missing, corrupt, or schema-mismatched files read as empty."""
+    p = cache_path(path)
+    try:
+        with open(p) as f:
+            doc = json.load(f)
+        if (not isinstance(doc, dict)
+                or not isinstance(doc.get("entries"), dict)
+                or doc.get("version") != SCHEMA_VERSION):
+            return {"version": SCHEMA_VERSION, "entries": {}}
+        return doc
+    except (OSError, ValueError):
+        return {"version": SCHEMA_VERSION, "entries": {}}
+
+
+def lookup(*, device_kind: str, n: int, bw: int, dtype: str,
+           compute_uv: bool, backend: str, path: str | None = None
+           ) -> dict | None:
+    """The tuned entry for a pipeline key, or None (fall back to defaults).
+
+    Entries missing either kernel knob (``tw``, ``fuse``) are treated as
+    corrupt (None) so a half-written record can never half-configure a
+    pipeline.  ``max_batch`` is OPTIONAL — the search only persists it
+    when the batch axis was actually explored; when present it must be a
+    valid int >= 1 or the whole entry is rejected.
+    """
+    entry = load(path)["entries"].get(make_key(
+        device_kind=device_kind, n=n, bw=bw, dtype=dtype,
+        compute_uv=compute_uv, backend=backend))
+    if not isinstance(entry, dict):
+        return None
+    if not all(isinstance(entry.get(k), int) and entry[k] >= 1
+               for k in ("tw", "fuse")):
+        return None
+    if "max_batch" in entry and not (isinstance(entry["max_batch"], int)
+                                     and entry["max_batch"] >= 1):
+        return None
+    return entry
+
+
+def store(entry: dict, *, device_kind: str, n: int, bw: int, dtype: str,
+          compute_uv: bool, backend: str, path: str | None = None) -> str:
+    """Merge one tuned entry into the cache, atomically; returns the path.
+
+    Read-modify-write: existing entries under other keys survive.  The
+    temp file lives in the destination directory so ``os.replace`` stays
+    on one filesystem (atomic rename).
+    """
+    p = cache_path(path)
+    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+    doc = load(p)
+    entry = dict(entry)
+    entry.setdefault("tuned_at_unix", int(time.time()))
+    doc["entries"][make_key(device_kind=device_kind, n=n, bw=bw, dtype=dtype,
+                            compute_uv=compute_uv, backend=backend)] = entry
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(p) or ".",
+                               prefix=".cache-", suffix=".json.tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, p)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    return p

@@ -1,0 +1,83 @@
+"""Blocking timing harness — the ONE wall-clock path shared by the
+autotuner and the ``benchmarks/`` suites.
+
+``measure_seconds`` is the primitive: jit-warmup then median-of-k
+``block_until_ready`` wall times (``benchmarks/common.timeit`` delegates
+here, so a fix to the methodology lands everywhere at once).
+``time_stage2`` is the autotuner's workload: one batched stage-2 reduction
+at a candidate ``(tw, fuse, batch)`` — either the full ``bw -> 1``
+tile-width plan (``full=True``, what the search ranks: it charges small
+``tw`` for the extra stages it forces) or a single stage at the entry
+bandwidth (``full=False``, what ``benchmarks/hyperparams.py`` sweeps).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["measure_seconds", "banded_input", "time_stage2"]
+
+
+def measure_seconds(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds of ``fn(*args)`` (jax-blocking).
+
+    ``warmup`` calls are discarded (jit compilation + device spin-up);
+    ``iters`` timed calls then give a median — robust to the one-off
+    scheduling hiccups a mean would smear in.
+    """
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def banded_input(n: int, bw: int, *, batch: int = 1, dtype=jnp.float32,
+                 seed: int = 0) -> jax.Array:
+    """Dense upper-banded test matrices ``(batch, n, n)`` (batch=1 squeezed
+    to ``(n, n)``), same construction as ``benchmarks/common.banded``."""
+    rng = np.random.default_rng(seed)
+    shape = (batch, n, n) if batch > 1 else (n, n)
+    a = np.triu(rng.standard_normal(shape))
+    a = np.triu(a) - np.triu(a, bw + 1)
+    return jnp.asarray(a.astype(jnp.dtype(dtype).name))
+
+
+def time_stage2(n: int, bw: int, *, tw: int, fuse: int = 1, batch: int = 1,
+                backend: str = "ref", dtype=jnp.float32, tape: bool = False,
+                full: bool = True, warmup: int = 1, iters: int = 3,
+                seed: int = 0) -> float:
+    """Median seconds of ONE batched stage-2 call at the candidate config.
+
+    Returns the time of the whole batched call — divide by ``batch`` for
+    the per-matrix figure the search compares.  The packed input is built
+    once outside the timed region (the serve layer amortizes packing the
+    same way).
+    """
+    from repro.core import band as bandmod
+    from repro.core import bulge_chasing as bc
+
+    a = banded_input(n, bw, batch=batch, dtype=dtype, seed=seed)
+    tw0 = min(tw, max(bw - 1, 1))
+    packed = bandmod.pack(a, bw, tw0)
+
+    if full:
+        def call():
+            out = bc.bidiagonalize_packed(packed, n=n, bw=bw, tw=tw,
+                                          backend=backend, tape=tape,
+                                          fuse=fuse)
+            return out[:2] if tape else out
+    else:
+        def call():
+            return bc.reduce_stage_packed(packed, n=n, b_in=bw, tw=tw0,
+                                          backend=backend, tape=tape,
+                                          fuse=fuse)
+
+    return measure_seconds(call, warmup=warmup, iters=iters)

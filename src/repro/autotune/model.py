@@ -1,0 +1,211 @@
+"""Analytic stage-2 cost model (the paper's §III-C/D performance model,
+made falsifiable).
+
+The paper's methodological core is a *hardware-aware performance model* that
+ranks configurations before any kernel runs; measurement then only has to
+confirm (or refute) the top of the ranking.  This module is that model for
+our wavefront chase: given a candidate ``(tw, fuse, batch)`` it composes
+
+* **bytes moved** — from the packed-band layout: one fused super-step
+  streams the contiguous block ``(H, W_K)``, ``H = b_in + 2*tw + 1``,
+  ``W_K = fuse*b_in + tw + 1``, through fast memory once per K retired
+  cycles, i.e. each chase cycle costs ``2*H*W_K/K`` words of slow-memory
+  round trip (gather + scatter; the amortized form of DESIGN.md §9 — the
+  sub-leading ceil waste of partially-dead final super-steps is ignored so
+  the model stays strictly monotone in the knobs it ranks);
+* **launch overhead** — one fused dispatch per super-cycle ``T`` regardless
+  of batch (the batch axis folds into the same grid), amortized by ``fuse``
+  through the super-cycle count ``T(K) ~ sep(K)*nsweeps``;
+* **wavefront occupancy** — paper Eq. 1: achieved bandwidth scales with the
+  fraction of execution units the ``batch * G`` concurrent windows cover,
+  saturating at 1;
+* **feasibility** — a candidate whose ``tuning.vmem_working_set_bytes``
+  exceeds the profile's fast-memory budget is infeasible (``inf`` cost):
+  the VMEM cliff.
+
+roofline-composed with a per-device :class:`DeviceProfile` table that
+generalizes the hard-coded v5e constants of ``roofline/hw.py``.  The model
+is deliberately cheap (pure ints/floats, no jax arrays) so the search can
+rank the full grid and measure only the top-K (``autotune/search.py``),
+printing predicted-vs-measured error — the model is falsifiable, not
+decorative.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tuning
+from repro.roofline import hw
+
+__all__ = [
+    "DeviceProfile", "PROFILES", "device_kind", "profile_for",
+    "total_chase_cycles", "CostBreakdown", "stage_cost", "pipeline_cost",
+]
+
+
+# ---------------------------------------------------------------------------
+# Per-device profile table (generalizes roofline/hw.py beyond v5e)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """What the cost model needs to know about one device kind.
+
+    ``mem_bw`` is the achievable slow-memory stream bandwidth feeding the
+    chase (HBM on TPU/GPU; DRAM on the CPU ref path), ``launch_overhead_s``
+    the per-dispatch fixed cost being amortized by ``fuse`` (measured by
+    ``benchmarks/kernels_bench.py::_launch_overhead``), ``fast_mem_bytes``
+    the per-core budget the working set must fit (VMEM on TPU; the model
+    reuses it as the residency cliff on every platform), and
+    ``execution_units`` the number of cores the wavefront must cover for
+    full occupancy (paper Eq. 1; TensorCores on TPU).
+    """
+    device_kind: str
+    mem_bw: float                   # bytes/s
+    launch_overhead_s: float        # per fused dispatch
+    fast_mem_bytes: int             # residency budget per core
+    execution_units: int
+
+
+PROFILES: dict[str, DeviceProfile] = {
+    # v5e constants are the roofline/hw.py values (single source of truth).
+    "tpu v5e": DeviceProfile("tpu v5e", mem_bw=hw.HBM_BW,
+                             launch_overhead_s=3e-6,
+                             fast_mem_bytes=tuning.VMEM_BUDGET_BYTES,
+                             execution_units=2),
+    "tpu v4": DeviceProfile("tpu v4", mem_bw=1.2e12, launch_overhead_s=3e-6,
+                            fast_mem_bytes=tuning.VMEM_BUDGET_BYTES,
+                            execution_units=2),
+    "tpu v5p": DeviceProfile("tpu v5p", mem_bw=2.765e12,
+                             launch_overhead_s=3e-6,
+                             fast_mem_bytes=tuning.VMEM_BUDGET_BYTES,
+                             execution_units=2),
+    # Generic GPU entry: the paper's native target; kept so cached entries
+    # from a CUDA host carry a sane profile even though our kernels are
+    # TPU/ref.  fast_mem ~ L2-resident working set.
+    "gpu": DeviceProfile("gpu", mem_bw=1.0e12, launch_overhead_s=5e-6,
+                         fast_mem_bytes=32 * 2 ** 20, execution_units=64),
+    # CPU ref path: the "launch" is one fori_loop super-cycle of the jnp
+    # wavefront (~hundreds of us — see BENCH_stage2.json chase_launch rows),
+    # which dominates; mem_bw is a DRAM-stream figure.
+    "cpu": DeviceProfile("cpu", mem_bw=2.0e10, launch_overhead_s=250e-6,
+                         fast_mem_bytes=32 * 2 ** 20, execution_units=1),
+}
+
+
+def device_kind(device=None) -> str:
+    """Cache-key identity of the default (or given) jax device."""
+    dev = device if device is not None else jax.devices()[0]
+    kind = getattr(dev, "device_kind", "") or dev.platform
+    return str(kind).lower()
+
+
+def profile_for(kind: str | None = None) -> DeviceProfile:
+    """Best-effort profile for a device kind string (normalized prefix
+    match: "TPU v5 lite" and "tpu v5e" both hit the v5e row); unknown kinds
+    fall back by platform family, ultimately to the cpu row."""
+    k = (kind if kind is not None else device_kind()).lower()
+    norm = k.replace("tpu v5 lite", "tpu v5e").replace("tpu v5litepod",
+                                                       "tpu v5e")
+    for name, prof in PROFILES.items():
+        if norm.startswith(name) or name.startswith(norm):
+            return prof
+    if "tpu" in norm:
+        return PROFILES["tpu v5e"]
+    if any(tag in norm for tag in ("gpu", "cuda", "rocm", "nvidia")):
+        return PROFILES["gpu"]
+    return PROFILES["cpu"]
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+def total_chase_cycles(n: int, b_in: int, tw: int) -> int:
+    """Fuse-invariant count of chase cycles one stage executes.
+
+    Sweep R runs local cycles 0..j_max(R), ``j_max = (n-1-R-b_out)//b_in``
+    (canonical home of the count; ``benchmarks/fusion.py`` reports it as the
+    honest throughput axis).
+    """
+    b_out = b_in - tw
+    return sum((n - 1 - r - b_out) // b_in + 1
+               for r in range(max(n - 1 - b_out, 0)))
+
+
+@dataclasses.dataclass(frozen=True)
+class CostBreakdown:
+    """One stage's predicted cost, decomposed for the validation table."""
+    seconds: float                  # total for the batched call (inf: cliff)
+    mem_seconds: float
+    launch_seconds: float
+    bytes_moved: float              # slow-memory round-trip bytes, all slots
+    cycles: int                     # chase cycles (fuse-invariant)
+    supercycles: int                # fused dispatches
+    wavefront: int                  # concurrent windows per matrix (G)
+    occupancy: float                # Eq.-1 utilization in [1/eu, 1]
+    vmem_bytes: int                 # per-slot working set vs the budget
+    feasible: bool
+
+    @property
+    def per_matrix_seconds(self) -> float:
+        return self.seconds          # callers divide by batch explicitly
+
+
+def stage_cost(n: int, b_in: int, tw: int, *, fuse: int = 1, batch: int = 1,
+               dtype=jnp.float32, profile: DeviceProfile | None = None,
+               tape: bool = False) -> CostBreakdown:
+    """Predicted wall seconds of ONE batched stage reduction ``b_in ->
+    b_in - tw`` at super-step depth ``fuse`` (the model of the module
+    docstring).  Infeasible working sets return ``seconds=inf``."""
+    from repro.core import bulge_chasing as bc
+
+    prof = profile if profile is not None else profile_for()
+    assert 1 <= tw <= b_in - 1 or b_in == 1, (b_in, tw)
+    assert fuse >= 1 and batch >= 1, (fuse, batch)
+    s = jnp.dtype(dtype).itemsize
+    h = b_in + 2 * tw + 1
+    wk = fuse * b_in + tw + 1
+    cycles = total_chase_cycles(n, b_in, tw)
+    _, supercycles, g = bc.stage_schedule(n, b_in, tw, fuse)
+    vmem = tuning.vmem_working_set_bytes(b_in, tw, dtype, fuse=fuse,
+                                         tape=tape)
+    feasible = vmem <= prof.fast_mem_bytes
+    # Amortized slow-memory traffic: each cycle costs 1/K of a contiguous
+    # (H, W_K) block round trip (gather + scatter), plus its tape slice.
+    words_per_cycle = 2.0 * h * wk / fuse
+    if tape:
+        words_per_cycle += 2.0 * (tw + 2)      # (v, tau) pair per cycle
+    bytes_moved = batch * cycles * words_per_cycle * s
+    occupancy = min(1.0, batch * max(g, 1) / prof.execution_units)
+    occupancy = max(occupancy, 1.0 / prof.execution_units)
+    t_mem = bytes_moved / (prof.mem_bw * occupancy)
+    t_launch = supercycles * prof.launch_overhead_s
+    total = (t_mem + t_launch) if feasible else math.inf
+    return CostBreakdown(seconds=total, mem_seconds=t_mem,
+                         launch_seconds=t_launch, bytes_moved=bytes_moved,
+                         cycles=cycles, supercycles=supercycles, wavefront=g,
+                         occupancy=occupancy, vmem_bytes=vmem,
+                         feasible=feasible)
+
+
+def pipeline_cost(n: int, bw: int, tw: int, *, fuse: int = 1, batch: int = 1,
+                  dtype=jnp.float32, profile: DeviceProfile | None = None,
+                  tape: bool = False) -> float:
+    """Predicted seconds of the whole stage-2 reduction ``bw -> 1`` — the
+    sum over ``tuning.stage_plan(bw, tw)`` stage costs (what
+    ``measure.time_stage2(full=True)`` times, hence what the search ranks).
+    ``inf`` as soon as any stage's working set misses the budget."""
+    total = 0.0
+    for b_in, twi in tuning.stage_plan(bw, tw):
+        c = stage_cost(n, b_in, twi, fuse=fuse, batch=batch, dtype=dtype,
+                       profile=profile, tape=tape)
+        if not c.feasible:
+            return math.inf
+        total += c.seconds
+    return total

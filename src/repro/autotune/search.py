@@ -1,0 +1,214 @@
+"""Model-pruned on-device search over the ``(tw, fuse, batch)`` grid.
+
+The paper's tuning methodology, end to end: the analytic model
+(``autotune/model.py``) ranks the FULL candidate grid by predicted cost;
+only the top-K candidates — plus the static analytic default, always — are
+actually timed (``autotune/measure.py``); the winner is whatever measured
+fastest *per matrix*.  Because the default is always in the measured set,
+the returned config beats or ties it by construction, and because every
+measured candidate carries its prediction, the result reports
+predicted-vs-measured error and the model's rank of the measured best —
+the model is falsifiable (a bad model shows up as the winner ranked deep
+in the list, or as large errors in the validation table).
+
+``SearchResult.to_entry()`` is the persistent-cache payload
+(``autotune/cache.py``); ``python -m repro.autotune`` drives this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+from repro.autotune import measure as measure_mod
+from repro.autotune import model as model_mod
+from repro.core import tuning
+
+__all__ = ["Candidate", "SearchResult", "candidate_grid", "search"]
+
+
+@dataclasses.dataclass
+class Candidate:
+    """One grid point; times are seconds PER MATRIX (batched call / batch)."""
+    tw: int
+    fuse: int
+    batch: int
+    predicted_s: float
+    measured_s: float | None = None
+
+    @property
+    def error_pct(self) -> float | None:
+        """Signed prediction error vs measurement, in % of measured."""
+        if self.measured_s is None or not math.isfinite(self.predicted_s):
+            return None
+        return 100.0 * (self.predicted_s - self.measured_s) / self.measured_s
+
+    def label(self) -> str:
+        return f"tw={self.tw} fuse={self.fuse} B={self.batch}"
+
+
+def candidate_grid(n: int, bw: int, *, dtype=jnp.float32,
+                   fuses: tuple[int, ...] = (1, 2, 4, 8),
+                   batches: tuple[int, ...] = (1,),
+                   tws: tuple[int, ...] | None = None
+                   ) -> list[tuple[int, int, int]]:
+    """The full (tw, fuse, batch) grid for one shape.
+
+    ``tws`` defaults to the powers of two below ``bw`` plus the two anchors
+    that matter: the cache-line default and the single-stage width
+    ``bw - 1`` (paper Fig. 4 sweeps the same axis).
+    """
+    if tws is None:
+        cand = {1, bw - 1, tuning.default_tilewidth(bw, dtype)}
+        p = 2
+        while p < bw:
+            cand.add(p)
+            p *= 2
+        tws = tuple(sorted(t for t in cand if 1 <= t <= max(bw - 1, 1)))
+    return [(t, k, b) for t in tws for k in fuses if k >= 1
+            for b in batches if b >= 1]
+
+
+@dataclasses.dataclass
+class SearchResult:
+    n: int
+    bw: int
+    dtype: str
+    backend: str
+    compute_uv: bool
+    device_kind: str
+    top_k: int
+    candidates: list[Candidate]          # full grid, predicted order
+    measured: list[Candidate]            # timed subset (top-K + default)
+    best: Candidate                      # measured argmin (per matrix)
+    default: Candidate                   # the static analytic default
+    batch_searched: bool = False         # batch axis had > 1 grid value
+
+    def model_rank_of_best(self) -> int:
+        """1-based rank of the measured-best candidate in the model's
+        predicted ordering (1 = the model nailed it)."""
+        for i, c in enumerate(self.candidates):
+            if (c.tw, c.fuse, c.batch) == (self.best.tw, self.best.fuse,
+                                           self.best.batch):
+                return i + 1
+        return len(self.candidates) + 1     # default-only winner, off-grid
+
+    def table(self) -> str:
+        """The predicted-vs-measured validation table (CLI output)."""
+        hdr = (f"shape n={self.n} bw={self.bw} dtype={self.dtype} "
+               f"backend={self.backend} uv={self.compute_uv} "
+               f"device={self.device_kind}")
+        lines = [hdr,
+                 f"{'rank':>4} {'tw':>4} {'fuse':>4} {'B':>3} "
+                 f"{'predicted_us':>13} {'measured_us':>12} {'err%':>7}"]
+        by_key = {(c.tw, c.fuse, c.batch): c for c in self.measured}
+        shown = 0
+        for i, c in enumerate(self.candidates):
+            m = by_key.pop((c.tw, c.fuse, c.batch), None)
+            if m is None and shown >= self.top_k:
+                continue
+            shown += 1
+            mu = f"{m.measured_s * 1e6:12.1f}" if m else f"{'-':>12}"
+            err = (f"{m.error_pct:6.1f}%" if m and m.error_pct is not None
+                   else f"{'-':>7}")
+            pred = (f"{c.predicted_s * 1e6:13.1f}"
+                    if math.isfinite(c.predicted_s) else f"{'vmem-cliff':>13}")
+            mark = " <- best" if (c.tw, c.fuse, c.batch) == (
+                self.best.tw, self.best.fuse, self.best.batch) else ""
+            dflt = " (default)" if (c.tw, c.fuse, c.batch) == (
+                self.default.tw, self.default.fuse, self.default.batch) else ""
+            lines.append(f"{i + 1:>4} {c.tw:>4} {c.fuse:>4} {c.batch:>3} "
+                         f"{pred} {mu} {err}{mark}{dflt}")
+        lines.append(f"model rank of measured best: "
+                     f"{self.model_rank_of_best()} of {len(self.candidates)} "
+                     f"(top_k={self.top_k})")
+        return "\n".join(lines)
+
+    def to_entry(self) -> dict:
+        """The persistent-cache payload for the winning config.
+
+        ``max_batch`` is included ONLY when the batch axis was actually
+        searched (> 1 grid value): a batches=(1,) run never compared batch
+        sizes, and persisting its trivial ``batch=1`` would make
+        ``resolve(autotune=True)`` serialize serve-side bucketing that the
+        Eq.-1 analytic default would have batched.  Consumers treat a
+        missing ``max_batch`` as "not tuned — use the analytic default".
+        """
+        entry = {
+            "tw": int(self.best.tw),
+            "fuse": int(self.best.fuse),
+            "measured_us": round(self.best.measured_s * 1e6, 3),
+            "predicted_us": (round(self.best.predicted_s * 1e6, 3)
+                             if math.isfinite(self.best.predicted_s)
+                             else None),
+            "default_measured_us": (round(self.default.measured_s * 1e6, 3)
+                                    if self.default.measured_s is not None
+                                    else None),
+            "model_rank_of_best": self.model_rank_of_best(),
+            "schema": 1,
+        }
+        if self.batch_searched:
+            entry["max_batch"] = int(self.best.batch)
+        return entry
+
+
+def _static_default(n: int, bw: int, dtype) -> tuple[int, int, int]:
+    """The knobs ``PipelineConfig.resolve`` picks with no cache: cache-line
+    tilewidth, the paper's unfused schedule, the Eq.-1 bucket batch."""
+    tw = max(1, min(tuning.default_tilewidth(bw, dtype), max(bw - 1, 1)))
+    return tw, 1, tuning.default_bucket_batch(n, bw)
+
+
+def search(n: int, bw: int, *, dtype=jnp.float32, backend: str = "ref",
+           compute_uv: bool = False, top_k: int = 4,
+           fuses: tuple[int, ...] = (1, 2, 4, 8),
+           batches: tuple[int, ...] = (1,),
+           profile: model_mod.DeviceProfile | None = None,
+           warmup: int = 1, iters: int = 2, seed: int = 0,
+           measure_fn=None) -> SearchResult:
+    """Tune one shape: rank the grid by the model, time top-K + default.
+
+    ``measure_fn(tw, fuse, batch) -> seconds (whole batched call)`` is
+    injectable for tests; the real path is ``measure.time_stage2`` on the
+    full ``bw -> 1`` reduction (so small tilewidths pay for the extra
+    stages they force — the honest objective).
+    """
+    if not batches or not fuses:
+        raise ValueError(f"batches={batches!r} and fuses={fuses!r} must be "
+                         f"non-empty")
+    prof = profile if profile is not None else model_mod.profile_for()
+    dname = jnp.dtype(dtype).name
+    if measure_fn is None:
+        def measure_fn(tw, fuse, batch):
+            return measure_mod.time_stage2(
+                n, bw, tw=tw, fuse=fuse, batch=batch, backend=backend,
+                dtype=dtype, tape=compute_uv, full=True, warmup=warmup,
+                iters=iters, seed=seed)
+
+    grid = candidate_grid(n, bw, dtype=dtype, fuses=fuses, batches=batches)
+    d_tw, d_fuse, d_batch = _static_default(n, bw, dtype)
+    d_batch = d_batch if d_batch in batches else min(batches)
+    if (d_tw, d_fuse, d_batch) not in grid:
+        grid.append((d_tw, d_fuse, d_batch))
+
+    cands = [Candidate(t, k, b, predicted_s=model_mod.pipeline_cost(
+        n, bw, t, fuse=k, batch=b, dtype=dtype, profile=prof,
+        tape=compute_uv) / b) for (t, k, b) in grid]
+    cands.sort(key=lambda c: (c.predicted_s, c.tw, c.fuse, c.batch))
+
+    to_time = [c for c in cands if math.isfinite(c.predicted_s)][:top_k]
+    default = next(c for c in cands if (c.tw, c.fuse, c.batch) ==
+                   (d_tw, d_fuse, d_batch))
+    if default not in to_time:
+        to_time.append(default)
+    for c in to_time:
+        c.measured_s = measure_fn(c.tw, c.fuse, c.batch) / c.batch
+    best = min(to_time, key=lambda c: c.measured_s)
+    return SearchResult(n=n, bw=bw, dtype=dname, backend=backend,
+                        compute_uv=compute_uv,
+                        device_kind=model_mod.device_kind(), top_k=top_k,
+                        candidates=cands, measured=to_time, best=best,
+                        default=default,
+                        batch_searched=len(set(batches)) > 1)

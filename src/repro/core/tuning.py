@@ -29,8 +29,8 @@ import jax.numpy as jnp
 __all__ = [
     "default_tilewidth", "rows_per_step", "sweep_separation",
     "max_concurrent_sweeps", "occupancy_matrix_size",
-    "vmem_working_set_bytes", "default_fuse_depth", "stage_plan",
-    "default_bucket_batch", "ChaseConfig", "PipelineConfig",
+    "vmem_working_set_bytes", "default_fuse_depth", "check_vmem_budget",
+    "stage_plan", "default_bucket_batch", "ChaseConfig", "PipelineConfig",
 ]
 
 LANE = 128          # TPU vector lane count
@@ -149,7 +149,11 @@ def default_fuse_depth(b_in: int, tw: int, dtype=jnp.float32, *,
     ``budget_bytes`` defaults to half of ``VMEM_BUDGET_BYTES`` — the other
     half is headroom for Pallas pipeline state and compiler spills.  Falls
     back to K = 1 when even K = 2 does not fit (the K = 1 path streams
-    pre-rolled windows and needs no dense scratch).
+    pre-rolled windows and needs no dense scratch).  The floor is HARD:
+    under any budget — zero, negative, or a cap < 1 — the answer is 1,
+    never 0 (a 0-depth schedule would execute no cycles and silently
+    return the input band; whether even K = 1 is *feasible* is the
+    separate ``check_vmem_budget`` guard that ``resolve`` runs).
 
     Scope: the model maximizes fast-memory residency per dispatch (the
     paper's axis), not wall-clock on a given host — launches stop falling
@@ -165,7 +169,33 @@ def default_fuse_depth(b_in: int, tw: int, dtype=jnp.float32, *,
         if vmem_working_set_bytes(b_in, tw, dtype, fuse=cand,
                                   tape=tape) <= budget:
             best = cand
-    return best
+    return max(best, 1)
+
+
+def check_vmem_budget(b_in: int, tw: int, dtype=jnp.float32, *,
+                      tape: bool = False,
+                      budget_bytes: int | None = None) -> int:
+    """Raise (clearly) when even the UNFUSED working set misses the budget.
+
+    ``default_fuse_depth`` degrades gracefully to K = 1, but when
+    ``vmem_working_set_bytes(b_in, tw, fuse=1)`` itself exceeds the budget
+    there is no depth to retreat to — proceeding would silently mis-tile
+    (the kernel's window could never be fast-memory resident, the exact
+    regime the paper's model exists to exclude).  Called by
+    ``ChaseConfig.resolve`` / ``PipelineConfig.resolve``; returns the
+    working-set bytes on success so callers can report headroom.
+    """
+    budget = VMEM_BUDGET_BYTES if budget_bytes is None else budget_bytes
+    need = vmem_working_set_bytes(b_in, tw, dtype, fuse=1, tape=tape)
+    if need > budget:
+        raise ValueError(
+            f"chase window working set for b_in={b_in}, tw={tw}, "
+            f"dtype={jnp.dtype(dtype).name} (tape={tape}) needs {need} B "
+            f"of fast memory at fuse=1 but the budget is {budget} B; "
+            f"reduce the tilewidth/bandwidth (tw <= {tw} shrinks the "
+            f"window H x W = (b_in + 2*tw + 1) x (b_in + tw + 1)) or "
+            f"raise budget_bytes")
+    return need
 
 
 def stage_plan(bw: int, tw: int) -> tuple[tuple[int, int], ...]:
@@ -207,6 +237,7 @@ class ChaseConfig:
     def resolve(n: int, b_in: int, dtype=jnp.float32, tw: int | None = None
                 ) -> "ChaseConfig":
         tw = tw if tw is not None else default_tilewidth(b_in, dtype)
+        check_vmem_budget(b_in, tw, dtype)
         return ChaseConfig(
             b_in=b_in, tw=tw,
             rows_per_step=rows_per_step(b_in, tw, dtype),
@@ -260,7 +291,8 @@ class PipelineConfig:
                 dtype=jnp.float32, n: int | None = None,
                 max_batch: int | None = None, unroll: int = 1,
                 compute_uv: bool = False,
-                fuse: int | None = 1) -> "PipelineConfig":
+                fuse: int | None = 1, autotune: bool = False,
+                autotune_cache: str | None = None) -> "PipelineConfig":
         """Resolve every knob to a concrete value.
 
         ``backend="auto"`` and ``interpret=None`` are resolved by the backend
@@ -272,16 +304,44 @@ class PipelineConfig:
         paper's one-launch-per-cycle schedule.
         ``bw`` is clamped to >= 1 (bw = 0 — e.g. a 1x1 problem — would zero
         the stage-1 panel width; a bw-1 "band" is already bidiagonal, so
-        stage 2 is a no-op pass-through either way).
+        stage 2 is a no-op pass-through either way).  A (bw, tw) pair whose
+        unfused chase window cannot be fast-memory resident raises
+        (``check_vmem_budget``) instead of silently mis-tiling.
+
+        ``autotune=True`` (DESIGN.md §11) consults the persistent tuned
+        cache (``repro.autotune.cache``, keyed by device kind, n, bw,
+        dtype, compute_uv and the RESOLVED backend) and uses the measured
+        optimum for every knob still at its neutral default — ``tw=None``,
+        ``fuse`` in (None, 1), ``max_batch=None``; explicit values always
+        win.  On a cache miss (or without ``n``) the analytic defaults
+        above apply unchanged.  ``autotune_cache`` overrides the cache
+        path (else ``$REPRO_AUTOTUNE_CACHE`` / the XDG default).
         """
         from repro.kernels import ops  # deferred: registry lives kernels-side
 
         bw = max(bw, 1)
         if n is not None:
             bw = min(bw, max(n, 1))
+        backend, interpret = ops.resolve_backend(backend, interpret)
+        tuned = None
+        if autotune and n is not None:
+            from repro.autotune import cache as _at_cache   # deferred: cycle
+            from repro.autotune import model as _at_model
+            tuned = _at_cache.lookup(
+                device_kind=_at_model.device_kind(), n=n, bw=bw,
+                dtype=jnp.dtype(dtype).name, compute_uv=compute_uv,
+                backend=backend, path=autotune_cache)
+        if tuned is not None:
+            tw = tw if tw is not None else tuned["tw"]
+            fuse = fuse if fuse not in (None, 1) else tuned["fuse"]
+            if max_batch is None:
+                # max_batch is only in the entry when the search actually
+                # explored the batch axis; otherwise the Eq.-1 analytic
+                # default below stays in charge of bucket sizing.
+                max_batch = tuned.get("max_batch")
         tw = tw if tw is not None else default_tilewidth(bw, dtype)
         tw = max(1, min(tw, max(bw - 1, 1)))
-        backend, interpret = ops.resolve_backend(backend, interpret)
+        check_vmem_budget(bw, tw, dtype, tape=compute_uv)
         if max_batch is None:
             max_batch = default_bucket_batch(n, bw) if n else 8
         if fuse is None:

@@ -179,19 +179,37 @@ class SVDEngine:
     >>> eng = SVDEngine(PipelineConfig.resolve(bw=8, dtype=np.float64))
     >>> eng.submit(SVDRequest(uid=0, matrix=a, bw=8))
     >>> done = eng.run()
+
+    ``autotune=True`` resolves each bucket's pipeline against the
+    persistent tuned-config cache (DESIGN.md §11): the first flush of a
+    bucket key looks up the measured optimum for that exact ``(device, n,
+    bw, dtype, compute_uv, backend)``.  Precedence is explicit: opting in
+    means a cache HIT overrides the engine config's ``tw``/``fuse`` for
+    that bucket — per-bucket measured optima are the point of the flag,
+    and the engine config's knobs were resolved for its own default
+    shape, not this bucket's; on a MISS the engine's own config stays in
+    charge (it is never silently swapped for the analytic defaults).  Pin
+    knobs for every bucket by keeping ``autotune=False`` (the default).
+    The resolved config is memoized per key (one lookup — and one jit
+    compilation — per bucket, ever).  The engine-level ``max_batch``
+    stays a hard CAP either way.
     """
 
     def __init__(self, config=None, *, backend: str = "auto",
-                 max_batch: int | None = None):
+                 max_batch: int | None = None, autotune: bool = False,
+                 autotune_cache: str | None = None):
         from repro.core import tuning
         if config is None:
             config = tuning.PipelineConfig.resolve(backend=backend)
         if max_batch is not None:
             config = dataclasses.replace(config, max_batch=max_batch)
         self.config = config
+        self.autotune = autotune
+        self.autotune_cache = autotune_cache
         self.buckets: dict[tuple, list[SVDRequest]] = {}
         self.finished: list[SVDRequest] = []
         self.calls = 0                           # batched pipeline invocations
+        self._cfg_memo: dict[tuple, object] = {}  # bucket key -> resolved cfg
 
     def submit(self, req: SVDRequest) -> None:
         assert req.matrix.ndim == 2 and req.matrix.shape[0] == req.matrix.shape[1]
@@ -202,16 +220,46 @@ class SVDEngine:
 
     def _cfg_for(self, key: tuple):
         from repro.core import tuning
+        if key in self._cfg_memo:
+            return self._cfg_memo[key]
         n, bw, dtype, _banded, compute_uv = key
-        # The engine's max_batch is a CAP; per bucket it is tightened by the
-        # Eq.-1 occupancy default so large matrices (whose own wavefront
-        # already saturates the chip) are not zero-padded 8x for nothing.
-        eff = min(self.config.max_batch, tuning.default_bucket_batch(n, bw))
-        return tuning.PipelineConfig.resolve(
-            bw=bw, tw=self.config.tw, backend=self.config.backend,
-            interpret=self.config.interpret, dtype=np.dtype(dtype), n=n,
-            max_batch=max(1, eff), unroll=self.config.unroll,
-            compute_uv=compute_uv, fuse=self.config.fuse)
+        entry = None
+        if self.autotune:
+            from repro.autotune import cache as at_cache
+            from repro.autotune import model as at_model
+            entry = at_cache.lookup(
+                device_kind=at_model.device_kind(), n=n, bw=bw,
+                dtype=np.dtype(dtype).name, compute_uv=compute_uv,
+                backend=self.config.backend, path=self.autotune_cache)
+        if entry is not None:
+            # Tuned bucket: the measured optimum decides tw/fuse (and
+            # max_batch when the search explored the batch axis — absent
+            # otherwise, leaving the Eq.-1 default in charge).  The engine
+            # max_batch remains a cap.
+            eff = min(self.config.max_batch,
+                      entry.get("max_batch")
+                      or tuning.default_bucket_batch(n, bw))
+            cfg = tuning.PipelineConfig.resolve(
+                bw=bw, tw=entry["tw"], backend=self.config.backend,
+                interpret=self.config.interpret, dtype=np.dtype(dtype), n=n,
+                max_batch=max(1, eff), unroll=self.config.unroll,
+                compute_uv=compute_uv, fuse=entry["fuse"])
+        else:
+            # Cache miss (or autotune off): the engine's own resolved
+            # config stays in charge — an explicitly-configured tw/fuse is
+            # never silently discarded.  The engine's max_batch is a CAP;
+            # per bucket it is tightened by the Eq.-1 occupancy default so
+            # large matrices (whose own wavefront already saturates the
+            # chip) are not zero-padded 8x for nothing.
+            eff = min(self.config.max_batch,
+                      tuning.default_bucket_batch(n, bw))
+            cfg = tuning.PipelineConfig.resolve(
+                bw=bw, tw=self.config.tw, backend=self.config.backend,
+                interpret=self.config.interpret, dtype=np.dtype(dtype), n=n,
+                max_batch=max(1, eff), unroll=self.config.unroll,
+                compute_uv=compute_uv, fuse=self.config.fuse)
+        self._cfg_memo[key] = cfg
+        return cfg
 
     def step(self) -> int:
         """Flush the fullest bucket with one batched call; #requests served."""

@@ -1,0 +1,490 @@
+"""Autotune subsystem tests (DESIGN.md §11).
+
+Four groups:
+
+* cost-model properties — strictly cheaper with fuse until the VMEM cliff,
+  monotone in n / bw / dtype byte-width, exact units vs a hand-computed
+  small case;
+* cache — round trip, atomicity contract (merge keeps other keys),
+  corruption tolerance (garbage file reads as empty, half-written entries
+  never half-configure);
+* search — CPU ref end-to-end smoke: the returned config beats or ties
+  the static default on measured time, the model ranks the measured best
+  within top-K, injectable-measure unit behavior;
+* integration — the acceptance loop: ``python -m repro.autotune`` (in
+  process) persists an entry that ``PipelineConfig.resolve(autotune=True)``
+  then picks up, including through ``SVDEngine``'s per-bucket resolution;
+  plus the degenerate-edge guards (``default_fuse_depth`` floor,
+  ``check_vmem_budget`` raising instead of silently mis-tiling).
+"""
+
+import json
+import math
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.autotune import cache as at_cache
+from repro.autotune import measure as at_measure
+from repro.autotune import model as at_model
+from repro.autotune import search as at_search
+from repro.autotune.__main__ import main as autotune_main, parse_shapes
+from repro.core import tuning
+
+CPU = at_model.PROFILES["cpu"]
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+class TestCostModel:
+    def test_cost_strictly_decreases_with_fuse_until_vmem_cliff(self):
+        # A budget that admits K in {1, 2, 4} but not 8: costs must fall
+        # strictly while feasible, then hit the cliff (inf).
+        budget = tuning.vmem_working_set_bytes(32, 8, fuse=4) + 1
+        prof = at_model.DeviceProfile("t", mem_bw=CPU.mem_bw,
+                                      launch_overhead_s=CPU.launch_overhead_s,
+                                      fast_mem_bytes=budget,
+                                      execution_units=1)
+        costs = [at_model.stage_cost(1024, 32, 8, fuse=k, profile=prof)
+                 for k in (1, 2, 4, 8)]
+        assert costs[0].seconds > costs[1].seconds > costs[2].seconds
+        assert math.isinf(costs[3].seconds) and not costs[3].feasible
+        assert all(c.feasible for c in costs[:3])
+
+    def test_monotone_in_n(self):
+        costs = [at_model.stage_cost(n, 32, 8, profile=CPU).seconds
+                 for n in (128, 256, 512, 1024)]
+        assert costs == sorted(costs) and len(set(costs)) == len(costs)
+
+    def test_monotone_in_bw_pipeline(self):
+        # Whole bw -> 1 reduction: more bandwidth is strictly more work.
+        costs = [at_model.pipeline_cost(512, bw, 8, profile=CPU)
+                 for bw in (16, 32, 64)]
+        assert costs == sorted(costs) and len(set(costs)) == len(costs)
+
+    def test_monotone_in_dtype_bytes(self):
+        f32 = at_model.stage_cost(512, 32, 8, dtype=jnp.float32, profile=CPU)
+        f64 = at_model.stage_cost(512, 32, 8, dtype=jnp.float64, profile=CPU)
+        assert f64.seconds > f32.seconds
+        assert f64.bytes_moved == 2 * f32.bytes_moved
+
+    def test_units_sanity_hand_computed(self):
+        # n=16, b_in=4, tw=2, fuse=1, batch=1 on a 1 GB/s, 1 us-launch,
+        # single-unit device.  By hand: H=9, W=7; cycles = sum_{r<13}
+        # ((13-r)//4 + 1) = 31; bytes = 31 * 2*9*7 * 4 = 15624;
+        # supercycles = 3*12 + 1 = 37.
+        prof = at_model.DeviceProfile("hand", mem_bw=1e9,
+                                      launch_overhead_s=1e-6,
+                                      fast_mem_bytes=1 << 30,
+                                      execution_units=1)
+        c = at_model.stage_cost(16, 4, 2, profile=prof)
+        assert c.cycles == 31
+        assert c.bytes_moved == 15624.0
+        assert c.supercycles == 37
+        assert c.mem_seconds == pytest.approx(15624.0 / 1e9)
+        assert c.launch_seconds == pytest.approx(37e-6)
+        assert c.seconds == pytest.approx(c.mem_seconds + c.launch_seconds)
+
+    def test_total_chase_cycles_matches_schedule_sum(self):
+        # Against an independent enumeration of the wavefront schedule.
+        n, b_in, tw = 64, 8, 3
+        from repro.core import bulge_chasing as bc
+        _, T, G = bc.stage_schedule(n, b_in, tw)
+        executed = 0
+        for t in range(T):
+            for g in range(G):
+                _, _, _, active, _ = bc.chase_cycle_indices(t, g, n, b_in, tw)
+                executed += bool(active)
+        assert at_model.total_chase_cycles(n, b_in, tw) == executed
+
+    def test_occupancy_rewards_batch_until_saturation(self):
+        prof = at_model.DeviceProfile("occ", mem_bw=1e9,
+                                      launch_overhead_s=0.0,
+                                      fast_mem_bytes=1 << 30,
+                                      execution_units=256)
+        per1 = at_model.stage_cost(64, 8, 3, batch=1, profile=prof)
+        per8 = at_model.stage_cost(64, 8, 3, batch=8, profile=prof)
+        # Under-occupied: 8x the work in less than 8x the time.
+        assert per8.seconds < 8 * per1.seconds
+        assert per8.occupancy == pytest.approx(8 * per1.occupancy)
+
+    def test_profile_for_matches_and_falls_back(self):
+        assert at_model.profile_for("TPU v5e").device_kind == "tpu v5e"
+        assert at_model.profile_for("TPU v5 litepod-16") \
+            .device_kind == "tpu v5e"
+        assert at_model.profile_for("NVIDIA H100").device_kind == "gpu"
+        assert at_model.profile_for("weird-accelerator").device_kind == "cpu"
+        # The live device resolves to something in the table.
+        assert at_model.profile_for() in at_model.PROFILES.values()
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+KEY = dict(device_kind="testdev", n=128, bw=16, dtype="float32",
+           compute_uv=False, backend="ref")
+
+
+class TestCache:
+    def test_round_trip(self, tmp_path):
+        p = str(tmp_path / "cache.json")
+        entry = {"tw": 8, "fuse": 2, "max_batch": 4, "measured_us": 12.5}
+        assert at_cache.lookup(**KEY, path=p) is None
+        at_cache.store(entry, **KEY, path=p)
+        got = at_cache.lookup(**KEY, path=p)
+        assert got["tw"] == 8 and got["fuse"] == 2 and got["max_batch"] == 4
+        assert "tuned_at_unix" in got
+
+    def test_merge_keeps_other_keys(self, tmp_path):
+        p = str(tmp_path / "cache.json")
+        other = dict(KEY, n=256)
+        at_cache.store({"tw": 8, "fuse": 2, "max_batch": 4}, **KEY, path=p)
+        at_cache.store({"tw": 4, "fuse": 1, "max_batch": 2}, **other, path=p)
+        assert at_cache.lookup(**KEY, path=p)["tw"] == 8
+        assert at_cache.lookup(**other, path=p)["tw"] == 4
+
+    def test_corrupt_file_reads_empty_and_recovers(self, tmp_path):
+        p = str(tmp_path / "cache.json")
+        with open(p, "w") as f:
+            f.write("{not json at all")
+        assert at_cache.load(p)["entries"] == {}
+        assert at_cache.lookup(**KEY, path=p) is None
+        # store() over the corrupt file recovers it
+        at_cache.store({"tw": 8, "fuse": 2, "max_batch": 4}, **KEY, path=p)
+        assert at_cache.lookup(**KEY, path=p)["tw"] == 8
+        json.load(open(p))                        # file is valid JSON again
+
+    def test_wrong_schema_and_partial_entries_rejected(self, tmp_path):
+        p = str(tmp_path / "cache.json")
+        doc = {"version": 999, "entries": {at_cache.make_key(**KEY):
+                                           {"tw": 8, "fuse": 2,
+                                            "max_batch": 4}}}
+        with open(p, "w") as f:
+            json.dump(doc, f)
+        assert at_cache.lookup(**KEY, path=p) is None   # version mismatch
+        # Valid version but half-written entry (missing fuse): rejected.
+        doc["version"] = at_cache.SCHEMA_VERSION
+        doc["entries"][at_cache.make_key(**KEY)] = {"tw": 8, "max_batch": 4}
+        with open(p, "w") as f:
+            json.dump(doc, f)
+        assert at_cache.lookup(**KEY, path=p) is None
+
+    def test_env_var_overrides_path(self, tmp_path, monkeypatch):
+        p = str(tmp_path / "env-cache.json")
+        monkeypatch.setenv(at_cache.ENV_VAR, p)
+        assert at_cache.cache_path() == p
+        at_cache.store({"tw": 8, "fuse": 2, "max_batch": 4}, **KEY)
+        assert os.path.exists(p)
+        assert at_cache.lookup(**KEY)["tw"] == 8
+
+
+# ---------------------------------------------------------------------------
+# Search
+# ---------------------------------------------------------------------------
+
+class TestSearch:
+    def test_grid_contains_anchors(self):
+        grid = at_search.candidate_grid(512, 32)
+        tws = {t for t, _, _ in grid}
+        assert {1, 2, 4, 8, 16, 31} <= tws
+        assert tuning.default_tilewidth(32, jnp.float32) in tws
+        assert all(1 <= t <= 31 for t in tws)
+
+    def test_model_pruning_with_injected_measure(self):
+        # A fake measurement that inverts the model's opinion of fuse: the
+        # search must still return the measured best, and the validation
+        # table must expose the disagreement via the rank.
+        calls = []
+
+        def fake_measure(tw, fuse, batch):
+            calls.append((tw, fuse, batch))
+            return 1.0 + fuse * 0.5 + abs(tw - 8) * 0.01
+
+        res = at_search.search(256, 16, backend="ref", top_k=3,
+                               profile=CPU, measure_fn=fake_measure)
+        # Only top-K (+ default if outside) measured — pruning is real.
+        assert len(calls) == len(res.measured) <= 3 + 1
+        best_by_fake = min(res.measured,
+                           key=lambda c: fake_measure(c.tw, c.fuse, c.batch))
+        assert (res.best.tw, res.best.fuse) == (best_by_fake.tw,
+                                                best_by_fake.fuse)
+        assert 1 <= res.model_rank_of_best() <= len(res.candidates)
+        table = res.table()
+        assert "measured_us" in table and "<- best" in table
+
+    def test_default_always_measured_and_never_beaten_silently(self):
+        def fake_measure(tw, fuse, batch):
+            d_tw = tuning.default_tilewidth(16, jnp.float32)
+            return 0.5 if (tw, fuse) == (d_tw, 1) else 1.0    # default wins
+
+        res = at_search.search(256, 16, backend="ref", top_k=2,
+                               profile=CPU, measure_fn=fake_measure)
+        assert res.default in res.measured
+        assert (res.best.tw, res.best.fuse) == (res.default.tw,
+                                                res.default.fuse)
+        assert res.best.measured_s <= res.default.measured_s
+
+    def test_search_smoke_cpu_beats_or_ties_static_default(self):
+        # Real measurements on the ref path, tiny shape: the tuned config
+        # must beat or tie the static default (it is in the measured set).
+        res = at_search.search(64, 8, backend="ref", top_k=2,
+                               fuses=(1, 2), warmup=1, iters=1)
+        assert res.best.measured_s is not None
+        assert res.default.measured_s is not None
+        assert res.best.measured_s <= res.default.measured_s
+        assert res.model_rank_of_best() <= len(res.candidates)
+        entry = res.to_entry()
+        assert entry["tw"] >= 1 and entry["fuse"] >= 1
+        # batches=(1,) means the batch axis was never searched: persisting
+        # max_batch=1 would serialize serve bucketing, so it is omitted.
+        assert "max_batch" not in entry
+
+    def test_to_entry_round_trips_through_cache(self, tmp_path):
+        res = at_search.search(256, 16, backend="ref", top_k=2, profile=CPU,
+                               measure_fn=lambda tw, fuse, batch: 1.0)
+        p = str(tmp_path / "cache.json")
+        at_cache.store(res.to_entry(), device_kind="testdev", n=256, bw=16,
+                       dtype="float32", compute_uv=False, backend="ref",
+                       path=p)
+        got = at_cache.lookup(device_kind="testdev", n=256, bw=16,
+                              dtype="float32", compute_uv=False,
+                              backend="ref", path=p)
+        assert got["tw"] == res.best.tw and got["fuse"] == res.best.fuse
+
+    def test_batch_searched_grid_persists_max_batch(self):
+        res = at_search.search(256, 16, backend="ref", top_k=3, profile=CPU,
+                               batches=(1, 2, 4),
+                               measure_fn=lambda tw, fuse, batch:
+                                   1.0 / (1 + 0.1 * batch))
+        assert res.batch_searched
+        assert res.to_entry()["max_batch"] == res.best.batch >= 1
+
+    def test_empty_batches_raises_clearly(self):
+        with pytest.raises(ValueError, match="non-empty"):
+            at_search.search(64, 8, backend="ref", batches=(),
+                             measure_fn=lambda *a: 1.0)
+        with pytest.raises(SystemExit, match="batches"):
+            autotune_main(["--shapes", "n=64:bw=8", "--backend", "ref",
+                           "--batches", ","])
+
+
+# ---------------------------------------------------------------------------
+# Degenerate tuning edges (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+class TestDegenerateEdges:
+    def test_default_fuse_depth_never_below_one(self):
+        for budget in (0, 1, -5, 100):
+            assert tuning.default_fuse_depth(32, 8,
+                                             budget_bytes=budget) == 1
+        assert tuning.default_fuse_depth(32, 8, cap=0) == 1
+        assert tuning.default_fuse_depth(32, 8, cap=-3) == 1
+
+    def test_check_vmem_budget_raises_clearly(self):
+        with pytest.raises(ValueError, match="fast memory"):
+            tuning.check_vmem_budget(32, 8, budget_bytes=16)
+        # Success returns the working-set size.
+        need = tuning.check_vmem_budget(32, 8)
+        assert need == tuning.vmem_working_set_bytes(32, 8)
+
+    def test_pipeline_resolve_raises_on_infeasible_window(self):
+        with pytest.raises(ValueError, match="fast memory"):
+            tuning.PipelineConfig.resolve(bw=4096, tw=1024, n=8192,
+                                          backend="ref")
+
+    def test_chase_config_resolve_raises_on_infeasible_window(self):
+        with pytest.raises(ValueError, match="fast memory"):
+            tuning.ChaseConfig.resolve(8192, 4096, tw=1024)
+
+    def test_normal_shapes_still_resolve(self):
+        cfg = tuning.PipelineConfig.resolve(bw=64, n=1024, backend="ref",
+                                            fuse=None)
+        assert cfg.fuse >= 1
+        tuning.ChaseConfig.resolve(1024, 64)
+
+
+# ---------------------------------------------------------------------------
+# Integration: CLI -> cache -> resolve(autotune=True) -> engine
+# ---------------------------------------------------------------------------
+
+class TestIntegration:
+    def test_parse_shapes(self):
+        assert parse_shapes("n=512:bw=32") == [(512, 32)]
+        assert parse_shapes("n=512:bw=32, n=256:bw=16") == [(512, 32),
+                                                            (256, 16)]
+        with pytest.raises(SystemExit):
+            parse_shapes("n=512")
+        with pytest.raises(SystemExit):
+            parse_shapes("")
+
+    def test_cli_tunes_and_resolve_picks_up(self, tmp_path, monkeypatch,
+                                            capsys):
+        # The acceptance loop of ISSUE 4 on a CI-sized shape (the identical
+        # command with n=512:bw=32 is exercised by the slow variant below
+        # and the CI autotune smoke step).
+        p = str(tmp_path / "cache.json")
+        monkeypatch.setenv(at_cache.ENV_VAR, p)
+        rc = autotune_main(["--shapes", "n=64:bw=8", "--backend", "ref",
+                            "--top-k", "2", "--iters", "1"])
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "predicted_us" in out and "measured_us" in out   # validation
+        assert os.path.exists(p)
+        entry = at_cache.lookup(device_kind=at_model.device_kind(), n=64,
+                                bw=8, dtype="float32", compute_uv=False,
+                                backend="ref", path=p)
+        assert entry is not None
+
+        cfg = tuning.PipelineConfig.resolve(n=64, bw=8, backend="ref",
+                                            autotune=True)
+        assert (cfg.tw, cfg.fuse) == (entry["tw"], entry["fuse"])
+        # The default CLI grid has batches=(1,): max_batch is NOT tuned and
+        # the Eq.-1 analytic bucket default must stay in charge.
+        assert "max_batch" not in entry
+        assert cfg.max_batch == tuning.default_bucket_batch(64, 8)
+        # Model validation is printed and honest: the measured best sits
+        # within the measured top-K by construction — assert the table
+        # reports a finite rank.
+        assert "model rank of measured best:" in out
+
+    @pytest.mark.skipif(not os.environ.get("REPRO_AUTOTUNE_ACCEPT"),
+                        reason="slow acceptance shape (n=512, minutes on "
+                               "the CPU ref path); set "
+                               "REPRO_AUTOTUNE_ACCEPT=1 to run")
+    def test_cli_acceptance_shape_n512_bw32(self, tmp_path, monkeypatch):
+        p = str(tmp_path / "cache.json")
+        monkeypatch.setenv(at_cache.ENV_VAR, p)
+        rc = autotune_main(["--shapes", "n=512:bw=32", "--backend", "ref",
+                            "--top-k", "2", "--iters", "1"])
+        assert rc == 0
+        cfg = tuning.PipelineConfig.resolve(n=512, bw=32, backend="ref",
+                                            autotune=True)
+        entry = at_cache.lookup(device_kind=at_model.device_kind(), n=512,
+                                bw=32, dtype="float32", compute_uv=False,
+                                backend="ref", path=p)
+        assert entry is not None and cfg.tw == entry["tw"]
+
+    def test_resolve_explicit_kwargs_beat_cache(self, tmp_path, monkeypatch):
+        p = str(tmp_path / "cache.json")
+        monkeypatch.setenv(at_cache.ENV_VAR, p)
+        at_cache.store({"tw": 3, "fuse": 4, "max_batch": 7},
+                       device_kind=at_model.device_kind(), n=128, bw=16,
+                       dtype="float32", compute_uv=False, backend="ref",
+                       path=p)
+        cfg = tuning.PipelineConfig.resolve(n=128, bw=16, backend="ref",
+                                            autotune=True)
+        assert (cfg.tw, cfg.fuse, cfg.max_batch) == (3, 4, 7)
+        cfg2 = tuning.PipelineConfig.resolve(n=128, bw=16, backend="ref",
+                                             tw=8, fuse=2, max_batch=2,
+                                             autotune=True)
+        assert (cfg2.tw, cfg2.fuse, cfg2.max_batch) == (8, 2, 2)
+
+    def test_resolve_miss_falls_back_to_analytic_defaults(self, tmp_path,
+                                                          monkeypatch):
+        monkeypatch.setenv(at_cache.ENV_VAR, str(tmp_path / "empty.json"))
+        with_at = tuning.PipelineConfig.resolve(n=128, bw=16, backend="ref",
+                                                autotune=True)
+        without = tuning.PipelineConfig.resolve(n=128, bw=16, backend="ref")
+        assert with_at == without
+
+    def test_resolve_entry_without_max_batch_keeps_eq1_default(
+            self, tmp_path, monkeypatch):
+        p = str(tmp_path / "cache.json")
+        monkeypatch.setenv(at_cache.ENV_VAR, p)
+        at_cache.store({"tw": 3, "fuse": 4},        # batch axis not searched
+                       device_kind=at_model.device_kind(), n=128, bw=16,
+                       dtype="float32", compute_uv=False, backend="ref",
+                       path=p)
+        cfg = tuning.PipelineConfig.resolve(n=128, bw=16, backend="ref",
+                                            autotune=True)
+        assert (cfg.tw, cfg.fuse) == (3, 4)
+        assert cfg.max_batch == tuning.default_bucket_batch(128, 16)
+
+    def test_engine_resolves_tuned_config_per_bucket(self, tmp_path,
+                                                     monkeypatch):
+        from repro.serve.engine import SVDEngine, SVDRequest
+        p = str(tmp_path / "cache.json")
+        monkeypatch.setenv(at_cache.ENV_VAR, p)
+        n, bw = 24, 4
+        at_cache.store({"tw": 2, "fuse": 2, "max_batch": 2},
+                       device_kind=at_model.device_kind(), n=n, bw=bw,
+                       dtype="float32", compute_uv=False, backend="ref",
+                       path=p)
+        rng = np.random.default_rng(0)
+        a = np.triu(rng.standard_normal((n, n)).astype(np.float32))
+        a = np.triu(a) - np.triu(a, bw + 1)
+
+        eng = SVDEngine(backend="ref", autotune=True)
+        for uid in range(3):
+            eng.submit(SVDRequest(uid=uid, matrix=a, bw=bw))
+        key = (n, bw, "float32", False, False)
+        cfg = eng._cfg_for(key)
+        assert (cfg.tw, cfg.fuse, cfg.max_batch) == (2, 2, 2)
+        assert eng._cfg_for(key) is cfg          # memoized per bucket
+        done = eng.run()
+        assert len(done) == 3 and eng.calls == 2  # 3 reqs / bucket of 2
+        ref = np.linalg.svd(a.astype(np.float64), compute_uv=False)
+        np.testing.assert_allclose(done[0].sigma, ref, atol=1e-4)
+
+    def test_engine_autotune_miss_matches_default_engine(self, tmp_path,
+                                                         monkeypatch):
+        from repro.serve.engine import SVDEngine
+        monkeypatch.setenv(at_cache.ENV_VAR, str(tmp_path / "none.json"))
+        key = (24, 4, "float32", False, False)
+        tuned = SVDEngine(backend="ref", autotune=True)._cfg_for(key)
+        plain = SVDEngine(backend="ref")._cfg_for(key)
+        assert tuned == plain
+
+    def test_engine_autotune_miss_keeps_explicit_config(self, tmp_path,
+                                                        monkeypatch):
+        # An explicitly-configured engine with an empty cache must not have
+        # its tw/fuse silently replaced by the analytic defaults.
+        from repro.serve.engine import SVDEngine
+        monkeypatch.setenv(at_cache.ENV_VAR, str(tmp_path / "none.json"))
+        base = tuning.PipelineConfig.resolve(bw=16, tw=4, fuse=2,
+                                             backend="ref")
+        cfg = SVDEngine(base, autotune=True)._cfg_for(
+            (128, 16, "float32", False, False))
+        assert (cfg.tw, cfg.fuse) == (4, 2)
+
+
+# ---------------------------------------------------------------------------
+# Shared timing harness
+# ---------------------------------------------------------------------------
+
+class TestMeasure:
+    def test_measure_seconds_median(self):
+        calls = []
+
+        def fn():
+            calls.append(1)
+            return jnp.zeros(())
+
+        t = at_measure.measure_seconds(fn, warmup=2, iters=3)
+        assert t >= 0.0 and len(calls) == 5
+
+    def test_time_stage2_runs_and_is_positive(self):
+        t = at_measure.time_stage2(24, 4, tw=2, backend="ref",
+                                   warmup=0, iters=1)
+        assert t > 0.0
+
+    def test_banded_input_shape_and_bandwidth(self):
+        from repro.core import band as bandmod
+        a = at_measure.banded_input(16, 3, batch=2)
+        assert a.shape == (2, 16, 16)
+        assert int(jnp.max(bandmod.bandwidth_of(a))) <= 3
+        assert bool(jnp.all(jnp.tril(a[0], -1) == 0))
+
+    def test_benchmarks_common_delegates_here(self):
+        import importlib.util
+        spec = importlib.util.spec_from_file_location(
+            "bench_common", os.path.join(os.path.dirname(__file__), "..",
+                                         "benchmarks", "common.py"))
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        assert mod.measure_seconds is at_measure.measure_seconds
