@@ -48,7 +48,7 @@ import jax.numpy as jnp
 jax.config.update("jax_enable_x64", True)
 
 SUITES = ["accuracy", "hyperparams", "occupancy", "scaling", "precision",
-          "kernels_bench", "fusion", "batched", "vectors"]
+          "kernels_bench", "fusion", "batched", "vectors", "serve_load"]
 
 
 def _supports_smoke(fn) -> bool:
@@ -61,6 +61,20 @@ def _supports_smoke(fn) -> bool:
 def _parse_row(line: str) -> dict:
     name, us, derived = line.split(",", 2)
     return {"name": name, "us_per_call": float(us), "derived": derived}
+
+
+def _cpu_model() -> str:
+    """Host CPU identity.  ``device_kind`` is just "cpu" on EVERY CPU host,
+    so CPU wall-clock baselines need the actual part number to know whether
+    they are comparable (a TPU kind like "tpu v5e" already carries it)."""
+    try:
+        with open("/proc/cpuinfo") as f:
+            for line in f:
+                if line.startswith("model name"):
+                    return line.split(":", 1)[1].strip()
+    except OSError:
+        pass
+    return platform.processor() or ""
 
 
 def _flat_rows(report: dict) -> dict[str, float]:
@@ -102,6 +116,9 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated exact suite names (see --list)")
+    ap.add_argument("--exclude", default="", metavar="NAMES",
+                    help="comma-separated exact suite names to skip (e.g. a "
+                         "suite a dedicated CI step already runs)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes; suites without a smoke mode are skipped")
     ap.add_argument("--list", action="store_true", dest="list_suites",
@@ -128,6 +145,12 @@ def main(argv=None) -> None:
         if unknown:
             ap.error(f"unknown suite(s) {unknown}; registered: {SUITES}")
         selected = [s for s in SUITES if s in wanted]
+    if args.exclude:
+        excl = [s.strip() for s in args.exclude.split(",") if s.strip()]
+        unknown = sorted(set(excl) - set(SUITES))
+        if unknown:
+            ap.error(f"unknown suite(s) {unknown}; registered: {SUITES}")
+        selected = [s for s in selected if s not in excl]
     print("name,us_per_call,derived")
     from repro.autotune.model import device_kind
 
@@ -138,6 +161,7 @@ def main(argv=None) -> None:
         # entries, which share the device_kind key axis — hence the same
         # normalization) comparable.
         "device_kind": device_kind(),
+        "cpu_model": _cpu_model(),
         "device_count": jax.device_count(),
         "x64": bool(jax.config.jax_enable_x64),
         "default_dtype": str(jnp.zeros(()).dtype),
@@ -171,15 +195,27 @@ def main(argv=None) -> None:
             baseline = json.load(f)
         warn_only = args.compare_warn_only
         base_kind = baseline.get("device_kind", "")
+        mismatch = ""
         if base_kind != report["device_kind"]:
             # A pre-metadata baseline (no device_kind) is just as
             # non-comparable as a different device: downgrade either way
             # so the gate never blocks on numbers from an unknown host.
-            what = (f"baseline device_kind {base_kind!r}" if base_kind
-                    else "baseline has no device_kind (pre-metadata schema)")
-            print(f"# compare: {what} vs host {report['device_kind']!r}; "
-                  f"cross-host numbers are not comparable -> warn-only",
-                  flush=True)
+            mismatch = (f"baseline device_kind {base_kind!r} vs host "
+                        f"{report['device_kind']!r}" if base_kind
+                        else "baseline has no device_kind (pre-metadata "
+                             "schema)")
+        elif (base_kind == "cpu"
+              and baseline.get("cpu_model", "") != report["cpu_model"]):
+            # "cpu" matches on every CPU host; wall-clock between different
+            # parts is not comparable, so the CPU identity is the model
+            # string.  Re-baseline from a CI runner's uploaded
+            # bench_smoke.json artifact to arm the gate on that hardware.
+            mismatch = (f"baseline cpu_model "
+                        f"{baseline.get('cpu_model', '')!r} vs host "
+                        f"{report['cpu_model']!r}")
+        if mismatch:
+            print(f"# compare: {mismatch}; cross-host numbers are not "
+                  f"comparable -> warn-only", flush=True)
             warn_only = True
         lines, failures = compare_reports(
             baseline, report, threshold_pct=args.compare_threshold)

@@ -20,12 +20,13 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import svd as svdmod
 
 __all__ = ["batched_singular_values", "sharded_singular_values",
-           "sharded_svd", "spectrum_of_params", "square_embed"]
+           "sharded_svd", "sharded_pipeline_dispatch", "shard_pad",
+           "spectrum_of_params", "square_embed"]
 
 
 def square_embed(w: jax.Array, size: int) -> jax.Array:
@@ -59,7 +60,7 @@ def batched_singular_values(mats: jax.Array, *, bw: int | None = None,
 def sharded_singular_values(mats: jax.Array, mesh: Mesh, *, bw: int = 32,
                             tw: int | None = None, backend: str = "auto",
                             batch_axes: tuple[str, ...] = ("data",),
-                            compute_uv: bool = False):
+                            compute_uv: bool = False, config=None):
     """Batch-dispatch spectra across the mesh: (B, n, n) -> (B, n).
 
     B must be divisible by the product of ``batch_axes`` sizes; each device
@@ -68,9 +69,15 @@ def sharded_singular_values(mats: jax.Array, mesh: Mesh, *, bw: int = 32,
     tapes locally — vector accumulation needs no collectives either (one
     matrix never crosses a core) — returning sharded ``(U, sigma, V^T)``.
     """
+    if config is not None:
+        # The resolved config is the single source of truth; dropping the
+        # loose kwargs here keeps PipelineConfig.of's conflict check from
+        # tripping on this function's own defaults.
+        bw, tw, backend = None, None, "auto"
     spec = P(batch_axes)
     fn = functools.partial(batched_singular_values, bw=bw, tw=tw,
-                           backend=backend, compute_uv=compute_uv)
+                           backend=backend, compute_uv=compute_uv,
+                           config=config)
     out_specs = (spec, spec, spec) if compute_uv else spec
     shard_fn = jax.shard_map(fn, mesh=mesh, in_specs=(spec,),
                              out_specs=out_specs, check_vma=False)
@@ -84,6 +91,57 @@ def sharded_svd(mats: jax.Array, mesh: Mesh, *, bw: int = 32,
     ``(U (B, n, n), sigma (B, n), V^T (B, n, n))``, batch-sharded."""
     return sharded_singular_values(mats, mesh, bw=bw, tw=tw, backend=backend,
                                    batch_axes=batch_axes, compute_uv=True)
+
+
+def shard_pad(b: int, shards: int) -> int:
+    """Rows to append so a batch of ``b`` splits evenly over ``shards``."""
+    assert shards >= 1, shards
+    return (-b) % shards
+
+
+def sharded_pipeline_dispatch(mats: jax.Array, mesh: Mesh, *, config,
+                              banded: bool = False, compute_uv: bool = False,
+                              batch_axes: tuple[str, ...] = ("data",)):
+    """Serve-tier mesh dispatch (DESIGN.md §12): pad the leading batch axis
+    to shard divisibility, run the bucket's exact pipeline batch-sharded —
+    every device chases its own sub-batch fully locally, zero collectives —
+    and slice the padding back off the gathered result.
+
+    ``config`` is the bucket's resolved :class:`PipelineConfig` (it closes
+    over the shard_map body as a static value, so one compilation per bucket
+    key survives sharding).  Mirrors the four local dispatch modes of
+    ``serve.SVDEngine``: ``(banded, compute_uv)`` selects among
+    ``svd_batched`` / ``banded_singular_values`` / ``svd`` / ``banded_svd``.
+    Padding rows are independent zero matrices — sigma(0) = 0 — and are
+    dropped before anyone sees them.
+    """
+    shards = 1
+    for ax in batch_axes:
+        shards *= mesh.shape[ax]
+    b0 = mats.shape[0]
+    pad = shard_pad(b0, shards)
+    if pad:
+        mats = jnp.concatenate(
+            [mats, jnp.zeros((pad,) + mats.shape[1:], mats.dtype)])
+
+    def local(ms):
+        if compute_uv:
+            fn = svdmod.banded_svd if banded else svdmod.svd
+            return fn(ms, config=config, compute_uv=True)
+        if banded:
+            return svdmod.banded_singular_values(ms, bw=config.bw,
+                                                 config=config)
+        return svdmod.svd_batched(ms, config=config)
+
+    spec = P(batch_axes)
+    out_specs = (spec, spec, spec) if compute_uv else spec
+    fn = jax.shard_map(local, mesh=mesh, in_specs=(spec,),
+                       out_specs=out_specs, check_vma=False)
+    out = fn(mats)
+    if compute_uv:
+        u, sig, vt = out
+        return u[:b0], sig[:b0], vt[:b0]
+    return out[:b0]
 
 
 def spectrum_of_params(params, *, size: int = 256, bw: int = 32,

@@ -20,7 +20,6 @@ Usage:
 """
 
 import argparse
-import dataclasses
 import json
 import time
 import traceback
@@ -33,7 +32,7 @@ from repro.configs.base import get_config, list_configs
 from repro.configs.shapes import SUITES, cells
 from repro.launch.mesh import make_production_mesh, rules_for
 from repro.models import batch_logical, build, input_specs
-from repro.parallel.sharding import param_shardings, use_rules, zero1_shardings
+from repro.parallel.sharding import use_rules, zero1_shardings
 from repro.roofline import analyze, hw
 from repro.train.optimizer import AdamWConfig
 from repro.train.trainer import Trainer

@@ -8,11 +8,13 @@ devices via its own XLA_FLAGS).
 
 from __future__ import annotations
 
+import os
+
 import jax
 
 from repro.parallel.sharding import AxisRules, DEFAULT_RULES, MULTIPOD_RULES
 
-__all__ = ["make_production_mesh", "rules_for"]
+__all__ = ["make_production_mesh", "rules_for", "serve_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -28,3 +30,42 @@ def rules_for(mesh) -> AxisRules:
     import dataclasses
     base = MULTIPOD_RULES if "pod" in mesh.shape else DEFAULT_RULES
     return dataclasses.replace(base, mesh=mesh)
+
+
+def serve_mesh(*, env_var: str = "REPRO_SERVE_MESH"):
+    """Serve-tier dispatch mesh from ``$REPRO_SERVE_MESH``, or ``None``.
+
+    The env var configures how many local devices the serving engines'
+    sharded dispatch (DESIGN.md §12) spreads full buckets over:
+
+    * unset / empty — ``None``: engines dispatch locally (single device);
+    * ``"auto"``    — every visible device on one ``("data",)`` axis;
+    * an integer    — that many devices (clamped to the visible count).
+
+    Returns ``None`` — engines then degrade gracefully to local dispatch —
+    when fewer than 2 devices would participate, or when the installed jax
+    predates the ``jax.shard_map``/``AxisType`` surface the sharded paths
+    target (the environment-gated seed condition, DESIGN.md §10).  A value
+    that parses as neither ``"auto"`` nor an integer raises — a typo'd
+    explicit config should be loud, not silently single-device.  Like
+    every mesh here this is a FUNCTION: importing the module never touches
+    jax device state.
+    """
+    spec = os.environ.get(env_var, "").strip().lower()
+    if not spec:
+        return None
+    if spec != "auto":
+        try:
+            int(spec)
+        except ValueError:
+            raise ValueError(
+                f"${env_var}={spec!r}: expected unset, 'auto', or a device "
+                f"count") from None
+    if not (hasattr(jax, "shard_map") and hasattr(jax.sharding, "AxisType")):
+        return None
+    ndev = jax.device_count() if spec == "auto" else int(spec)
+    ndev = min(ndev, jax.device_count())
+    if ndev < 2:
+        return None
+    return jax.make_mesh((ndev,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))

@@ -1,6 +1,13 @@
-"""Serving driver: batched requests through the continuous-batching engine.
+"""Serving drivers: batched token decoding, and the async SVD serve tier.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --svd --requests 32 --rate 200
+
+The ``--svd`` mode drives :class:`repro.serve.AsyncSVDEngine` with an
+open-loop request stream (arrivals do not wait for completions) and prints
+latency percentiles plus the engine metrics snapshot.  With
+``REPRO_SERVE_MESH`` set (see ``repro.launch.mesh.serve_mesh``) full
+buckets are batch-sharded across all configured local devices.
 """
 
 from __future__ import annotations
@@ -25,7 +32,23 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--svd", action="store_true",
+                    help="drive the async SVD serve tier instead of the "
+                         "token engine")
+    ap.add_argument("--svd-n", type=int, default=64, metavar="N",
+                    help="[--svd] matrix size")
+    ap.add_argument("--svd-bw", type=int, default=8, metavar="BW",
+                    help="[--svd] stage-1 target bandwidth")
+    ap.add_argument("--rate", type=float, default=100.0,
+                    help="[--svd] open-loop Poisson arrival rate, req/s")
+    ap.add_argument("--timeout-ms", type=float, default=0.0,
+                    help="[--svd] per-request deadline (0: none)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="[--svd] per-bucket tuned-config cache (DESIGN.md "
+                         "§11)")
     args = ap.parse_args(argv)
+    if args.svd:
+        return main_svd(args)
 
     cfg = get_config(args.arch) if args.full else smoke_of(args.arch)
     model = build(cfg)
@@ -48,6 +71,67 @@ def main(argv=None):
         print(f"req {r.uid}: {r.output}")
     print(f"served {len(done)} requests / {ntok} tokens in {dt:.1f}s "
           f"({ntok / max(dt, 1e-9):.1f} tok/s)")
+
+
+def main_svd(args):
+    """Open-loop async SVD serving demo (DESIGN.md §12)."""
+    jax.config.update("jax_enable_x64", True)
+    from repro.launch.mesh import serve_mesh
+    from repro.serve import AsyncSVDEngine, SVDRequest
+
+    mesh = serve_mesh()
+    n, bw = args.svd_n, args.svd_bw
+    rng = np.random.default_rng(0)
+    eng = AsyncSVDEngine(
+        backend="auto", autotune=args.autotune, mesh=mesh,
+        default_timeout_s=(args.timeout_ms / 1e3 or None))
+    # Warm the bucket (one compile) outside the timed window — never under
+    # the engine's default deadline (compiles take seconds).
+    eng.submit(SVDRequest(uid=-1, matrix=rng.standard_normal((n, n)),
+                          bw=bw), timeout_s=float("inf")).result()
+    # Hand-rolled open loop rather than benchmarks/serve_load.py's
+    # poisson_run on purpose: src/ must stay importable with PYTHONPATH=src
+    # alone (benchmarks/ lives outside the package).  The harness over
+    # there is the canonical measurement tool; this is the demo.
+    gaps = rng.exponential(1.0 / args.rate, args.requests)
+    futs, lat, resolved = [], [], []
+
+    def _stamp(req):
+        # Latency must be sampled INSIDE the callback (when the future
+        # resolves), not when the loop below gets around to reading it;
+        # `resolved` counts every outcome so the wait below has a barrier.
+        def cb(fut):
+            if fut.exception() is None:
+                lat.append(time.monotonic() - req.arrived)
+            resolved.append(req.uid)
+        return cb
+
+    t0 = time.time()
+    for uid in range(args.requests):
+        time.sleep(gaps[uid])
+        r = SVDRequest(uid=uid, matrix=rng.standard_normal((n, n)), bw=bw)
+        f = eng.submit(r)
+        f.add_done_callback(_stamp(r))
+        futs.append(f)
+    settle = time.time() + 600
+    while len(resolved) < args.requests and time.time() < settle:
+        time.sleep(0.01)
+    for f in futs:
+        try:
+            f.result()
+        except Exception as exc:                 # noqa: BLE001 — demo report
+            print(f"request failed: {exc!r}")
+    dt = time.time() - t0
+    eng.stop()
+    snap = eng.metrics.snapshot()
+    if lat:
+        p50, p95, p99 = np.percentile(np.asarray(lat) * 1e3, [50, 95, 99])
+        print(f"served {len(lat)}/{args.requests} requests in {dt:.2f}s "
+              f"({len(lat) / dt:.1f} req/s) on "
+              f"{'mesh ' + str(mesh.shape) if mesh else 'one device'}")
+        print(f"latency p50/p95/p99 = {p50:.1f}/{p95:.1f}/{p99:.1f} ms")
+    print("metrics:", {k: round(v, 3) if isinstance(v, float) else v
+                       for k, v in sorted(snap.items())})
 
 
 if __name__ == "__main__":

@@ -5,7 +5,6 @@ of depth), four block kinds (dense / moe / hymba / rwkv), full-sequence
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

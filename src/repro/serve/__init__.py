@@ -1,3 +1,15 @@
-"""repro.serve — static-shape continuous-batching engines (tokens + SVD)."""
+"""repro.serve — static-shape continuous-batching engines (tokens + SVD).
+
+Sync tier: ``Engine`` (tokens) and ``SVDEngine`` (spectral, shape-bucketed).
+Async tier (DESIGN.md §12): ``AsyncSVDEngine`` — thread-safe micro-batching
+queue, deadline-aware admission, futures-based delivery, optional
+multi-device (mesh) dispatch; ``ServeMetrics`` counters live on every
+engine as ``.metrics``.
+"""
+from repro.serve.async_engine import AsyncSVDEngine, QueueFullError
 from repro.serve.engine import (Engine, Request, ServeConfig,
                                 SVDEngine, SVDRequest)
+from repro.serve.metrics import ServeMetrics
+
+__all__ = ["Engine", "Request", "ServeConfig", "SVDEngine", "SVDRequest",
+           "AsyncSVDEngine", "QueueFullError", "ServeMetrics"]

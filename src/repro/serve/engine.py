@@ -18,6 +18,11 @@ per round, queue-fed slots):
   traffic saturates the chase wavefront that a single matrix cannot (paper
   Eq. 1).  Padding keeps shapes static — one compilation per bucket key,
   ever.
+
+The asynchronous tier (thread-safe queue, micro-batch window, futures,
+deadlines, mesh dispatch) lives in ``serve/async_engine.py`` and extends
+``SVDEngine``; metrics counters shared by both live in
+``serve/metrics.py`` (DESIGN.md §12).
 """
 
 from __future__ import annotations
@@ -27,6 +32,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serve.metrics import ServeMetrics
 
 __all__ = ["Request", "ServeConfig", "Engine",
            "SVDRequest", "SVDEngine"]
@@ -145,7 +152,16 @@ class Engine:
 @dataclasses.dataclass
 class SVDRequest:
     """One spectral query: singular values (and optionally vectors) of a
-    square (or banded) matrix."""
+    square (or banded) matrix.
+
+    A request always COMPLETES (``done=True``) exactly once: either with
+    results (``sigma`` and, for ``compute_uv``, ``u``/``vt``) or with
+    ``error`` set to the exception that failed it — engines never raise a
+    per-request problem out of a whole batched step.  ``deadline`` (an
+    absolute ``time.monotonic()`` instant) is honored by the async engine:
+    a request still queued past its deadline is failed with
+    :class:`TimeoutError` instead of being dispatched.
+    """
     uid: int
     matrix: np.ndarray                         # (n, n); upper-banded if banded
     bw: int = 32                               # stage-1 target / band bandwidth
@@ -155,6 +171,10 @@ class SVDRequest:
     u: np.ndarray | None = None                # (n, n) left vectors (compute_uv)
     vt: np.ndarray | None = None               # (n, n) right vectors^T
     done: bool = False
+    error: Exception | None = None             # set instead of raising
+    deadline: float | None = None              # absolute monotonic() instant
+    arrived: float | None = None               # set at submit (monotonic())
+    future: object | None = dataclasses.field(default=None, repr=False)
 
     def key(self) -> tuple:
         """Bucket/compilation key: everything that shapes the pipeline.
@@ -193,11 +213,19 @@ class SVDEngine:
     The resolved config is memoized per key (one lookup — and one jit
     compilation — per bucket, ever).  The engine-level ``max_batch``
     stays a hard CAP either way.
+
+    ``mesh`` (a ``jax.sharding.Mesh`` with a ``"data"`` axis, e.g. from
+    ``repro.launch.mesh.serve_mesh()``) switches every batched dispatch to
+    the multi-device path: the padded bucket is batch-sharded through
+    ``core.distributed.sharded_pipeline_dispatch`` so one engine saturates
+    all local devices (DESIGN.md §12).  ``metrics`` (a
+    :class:`~repro.serve.metrics.ServeMetrics`) counts queue depth,
+    batch-fill ratio, and bucket hit-rate.
     """
 
     def __init__(self, config=None, *, backend: str = "auto",
                  max_batch: int | None = None, autotune: bool = False,
-                 autotune_cache: str | None = None):
+                 autotune_cache: str | None = None, mesh=None):
         from repro.core import tuning
         if config is None:
             config = tuning.PipelineConfig.resolve(backend=backend)
@@ -206,14 +234,21 @@ class SVDEngine:
         self.config = config
         self.autotune = autotune
         self.autotune_cache = autotune_cache
+        self.mesh = mesh                         # multi-device dispatch, §12
         self.buckets: dict[tuple, list[SVDRequest]] = {}
         self.finished: list[SVDRequest] = []
         self.calls = 0                           # batched pipeline invocations
+        self.metrics = ServeMetrics()
         self._cfg_memo: dict[tuple, object] = {}  # bucket key -> resolved cfg
 
     def submit(self, req: SVDRequest) -> None:
         assert req.matrix.ndim == 2 and req.matrix.shape[0] == req.matrix.shape[1]
-        self.buckets.setdefault(req.key(), []).append(req)
+        key = req.key()
+        self.metrics.add(submitted=1,
+                         bucket_hits=int(key in self._cfg_memo
+                                         or key in self.buckets))
+        self.buckets.setdefault(key, []).append(req)
+        self.metrics.set_queue_depth(self.pending())
 
     def pending(self) -> int:
         return sum(len(v) for v in self.buckets.values())
@@ -261,22 +296,46 @@ class SVDEngine:
         self._cfg_memo[key] = cfg
         return cfg
 
-    def step(self) -> int:
-        """Flush the fullest bucket with one batched call; #requests served."""
-        from repro.core import svd as svdmod
-        if not self.buckets:
-            return 0
-        key = max(self.buckets, key=lambda k: len(self.buckets[k]))
-        cfg = self._cfg_for(key)
-        reqs = self.buckets[key][: cfg.max_batch]
-        self.buckets[key] = self.buckets[key][cfg.max_batch :]
+    def _pop(self, key: tuple, cap: int) -> list[SVDRequest]:
+        """Dequeue up to ``cap`` requests of one bucket, submission order."""
+        reqs = self.buckets[key][:cap]
+        self.buckets[key] = self.buckets[key][cap:]
         if not self.buckets[key]:
             del self.buckets[key]
+        self.metrics.set_queue_depth(self.pending())
+        return reqs
 
+    def _finish(self, req: SVDRequest, error: Exception | None = None) -> None:
+        """Complete one request exactly once: results already on it, or
+        ``error``; resolve its future (async callers) either way."""
+        req.error = error
+        req.done = True
+        self.finished.append(req)
+        if error is None:
+            self.metrics.add(completed=1)
+        elif isinstance(error, TimeoutError):
+            self.metrics.add(timed_out=1)        # serving failure, not pipeline
+        else:
+            self.metrics.add(failed=1)
+        if req.future is not None:
+            try:
+                if error is not None:
+                    req.future.set_exception(error)
+                else:
+                    req.future.set_result(req)
+            except Exception:                    # noqa: BLE001 — caller
+                pass                             # cancelled; result stays on req
+
+    def _pipeline_call(self, key: tuple, cfg, mats: list[np.ndarray]):
+        """ONE batched pipeline dispatch for ``mats`` (padded to the bucket
+        capacity): returns np ``(sigma, u, vt)`` sliced to ``len(mats)``
+        (``u``/``vt`` None for values-only buckets).  Routes through the
+        mesh (``core.distributed``) when the engine owns one."""
+        from repro.core import svd as svdmod
         n, _bw, dtype, banded, compute_uv = key
         batch = np.zeros((cfg.max_batch, n, n), dtype)       # pad: zero matrices
-        for i, r in enumerate(reqs):
-            batch[i] = r.matrix
+        for i, m in enumerate(mats):
+            batch[i] = m
         stacked = jnp.asarray(batch)
         if stacked.dtype != np.dtype(dtype):
             # jax_enable_x64 is off: fp64 requests are silently downcast by
@@ -284,23 +343,75 @@ class SVDEngine:
             # tripping the config/input dtype-conflict check.
             cfg = dataclasses.replace(cfg, dtype=jnp.dtype(stacked.dtype).name)
         u = vt = None
-        if compute_uv:
+        if self.mesh is not None:
+            from repro.core import distributed
+            out = distributed.sharded_pipeline_dispatch(
+                stacked, self.mesh, config=cfg, banded=banded,
+                compute_uv=compute_uv)
+            if compute_uv:
+                u, sig, vt = out
+            else:
+                sig = out
+            self.metrics.add(sharded_batches=1)
+        elif compute_uv:
             fn = svdmod.banded_svd if banded else svdmod.svd
             u, sig, vt = fn(stacked, config=cfg, compute_uv=True)
-            u, vt = np.asarray(u), np.asarray(vt)
         elif banded:
             sig = svdmod.banded_singular_values(stacked, bw=cfg.bw, config=cfg)
         else:
             sig = svdmod.svd_batched(stacked, config=cfg)
         self.calls += 1
-        sig = np.asarray(sig)
+        self.metrics.add(batches=1, served_slots=len(mats),
+                         padded_slots=cfg.max_batch - len(mats))
+        k = len(mats)
+        sig = np.asarray(sig)[:k]
+        if compute_uv:
+            u, vt = np.asarray(u)[:k], np.asarray(vt)[:k]
+        return sig, u, vt
+
+    def _serve_batch(self, key: tuple, cfg, reqs: list[SVDRequest]) -> int:
+        """Serve one dequeued batch; every request in ``reqs`` COMPLETES, in
+        submission (FIFO) order — a failure is surfaced on the request
+        (``req.error``) rather than raised out of the step.  A batch-level
+        failure falls back to per-request dispatches so one poison request
+        cannot take down its co-batched neighbors."""
+        _n, _bw, _dtype, _banded, compute_uv = key
+        try:
+            sig, u, vt = self._pipeline_call(key, cfg,
+                                             [r.matrix for r in reqs])
+        except Exception as exc:                 # noqa: BLE001 — isolate below
+            if len(reqs) == 1:
+                self._finish(reqs[0], error=exc)
+                return 1
+            for r in reqs:                       # FIFO order preserved
+                self._serve_batch(key, cfg, [r])
+            return len(reqs)
         for i, r in enumerate(reqs):
             r.sigma = sig[i]
             if compute_uv:
                 r.u, r.vt = u[i], vt[i]
-            r.done = True
-            self.finished.append(r)
+            self._finish(r)
         return len(reqs)
+
+    def step(self) -> int:
+        """Flush the fullest bucket with one batched call; #requests served.
+
+        An empty engine is a no-op (returns 0, no dispatch).  Oversize
+        buckets split at the bucket capacity: each step serves at most
+        ``max_batch`` requests and leaves the tail queued, FIFO."""
+        if not self.buckets:
+            return 0
+        key = max(self.buckets, key=lambda k: len(self.buckets[k]))
+        try:
+            cfg = self._cfg_for(key)
+        except Exception as exc:                 # noqa: BLE001
+            # The whole bucket shares the un-resolvable key (e.g. a
+            # VMEM-infeasible (bw, tw)): fail its requests, keep serving
+            # the other buckets.
+            for r in self._pop(key, len(self.buckets[key])):
+                self._finish(r, error=exc)
+            return 0
+        return self._serve_batch(key, cfg, self._pop(key, cfg.max_batch))
 
     def run(self, max_rounds: int = 10_000) -> list[SVDRequest]:
         rounds = 0

@@ -1,0 +1,77 @@
+"""Per-engine serving metrics (DESIGN.md §12 glossary).
+
+One :class:`ServeMetrics` instance lives on every SVD engine (sync and
+async).  Counters are plain monotonic totals guarded by one lock — cheap
+enough to update on every submit/dispatch, and a consistent ``snapshot()``
+is what the load generator (``benchmarks/serve_load.py``), the serve smoke
+CI step, and operators read.
+
+Glossary (all derivable from the raw counters, but pre-computed in the
+snapshot because every consumer wants them):
+
+* ``queue_depth``      — requests admitted but not yet dispatched (gauge).
+* ``batch_fill_ratio`` — served requests / dispatched slots: 1.0 means
+  every batched call was full, low values mean the bucket capacity (or the
+  micro-batch window) is mis-sized and padding rows dominate.
+* ``bucket_hit_rate``  — submits that landed in an already-resolved bucket
+  key / total submits: the fraction of traffic that paid ZERO config
+  resolution or jit compilation (each bucket key compiles exactly once).
+"""
+
+from __future__ import annotations
+
+import threading
+
+__all__ = ["ServeMetrics"]
+
+
+class ServeMetrics:
+    """Thread-safe monotonic counters + gauges for one serving engine."""
+
+    _COUNTERS = (
+        "submitted",          # requests accepted into a bucket
+        "completed",          # requests finished with a result
+        "failed",             # requests finished with req.error set
+        "timed_out",          # requests dropped at dispatch: deadline passed
+        "rejected",           # requests refused at admission (queue full)
+        "batches",            # batched pipeline dispatches
+        "sharded_batches",    # dispatches that went through the mesh path
+        "served_slots",       # sum of len(reqs) over dispatches
+        "padded_slots",       # sum of (capacity - len(reqs)) over dispatches
+        "bucket_hits",        # submits into an already-seen bucket key
+    )
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        for name in self._COUNTERS:
+            setattr(self, name, 0)
+        self.queue_depth = 0                  # gauge, set by the engine
+
+    def add(self, **deltas: int) -> None:
+        """Atomically bump counters: ``metrics.add(submitted=1, ...)``."""
+        with self._lock:
+            for name, delta in deltas.items():
+                assert name in self._COUNTERS, name
+                setattr(self, name, getattr(self, name) + int(delta))
+
+    def set_queue_depth(self, depth: int) -> None:
+        with self._lock:
+            self.queue_depth = int(depth)
+
+    def snapshot(self) -> dict:
+        """Consistent point-in-time view: raw counters + derived ratios."""
+        with self._lock:
+            snap = {name: getattr(self, name) for name in self._COUNTERS}
+            snap["queue_depth"] = self.queue_depth
+        slots = snap["served_slots"] + snap["padded_slots"]
+        snap["batch_fill_ratio"] = (snap["served_slots"] / slots
+                                    if slots else 0.0)
+        snap["bucket_hit_rate"] = (snap["bucket_hits"] / snap["submitted"]
+                                   if snap["submitted"] else 0.0)
+        return snap
+
+    def __repr__(self) -> str:
+        snap = self.snapshot()
+        body = ", ".join(f"{k}={v:.3g}" if isinstance(v, float)
+                         else f"{k}={v}" for k, v in sorted(snap.items()))
+        return f"ServeMetrics({body})"

@@ -20,7 +20,6 @@ import dataclasses
 import queue
 import threading
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs.base import list_configs, smoke_of, get_config
-from repro.configs.shapes import SUITES, cells
+from repro.configs.shapes import cells
 from repro.models import build
 
 ARCHS = list_configs()

@@ -4,7 +4,6 @@ PipelineConfig/backend-registry layer, and the serve-layer bucketed path.
 """
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

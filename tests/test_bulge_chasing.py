@@ -9,7 +9,6 @@ The key invariants (hypothesis property tests + fixed cases):
 """
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st

@@ -4,7 +4,6 @@ packed band storage, and the Golub-Kahan stage-3 bisection."""
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import band as bandmod

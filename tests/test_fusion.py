@@ -20,7 +20,6 @@ Covers the fused stage-2 stack end to end:
 import dataclasses
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -28,7 +27,6 @@ from hypothesis import given, settings, strategies as st
 from repro.core import band as bandmod
 from repro.core import bulge_chasing as bc
 from repro.core import svd as svdmod
-from repro.core import transforms
 from repro.core import tuning
 from repro.core.tuning import PipelineConfig
 

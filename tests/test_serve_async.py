@@ -1,0 +1,310 @@
+"""Serving-tier tests: admission edge cases, FIFO/error regressions for the
+sync ``SVDEngine``, and the async micro-batching ``AsyncSVDEngine``
+(futures, deadlines, thread-safety, queue bounds, mesh dispatch)."""
+
+import asyncio
+import threading
+import time
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core.tuning import PipelineConfig
+from repro.serve import (AsyncSVDEngine, QueueFullError, SVDEngine,
+                         SVDRequest)
+
+needs_axis_type = pytest.mark.skipif(
+    not hasattr(jax.sharding, "AxisType"),
+    reason="jax.sharding.AxisType unavailable on this jax "
+           "(pre-existing seed failure, DESIGN.md §10)")
+
+
+def cfg4(max_batch=4):
+    return PipelineConfig.resolve(bw=4, tw=2, backend="ref",
+                                  dtype=np.float64, max_batch=max_batch)
+
+
+def dense(seed, n=16):
+    return np.random.default_rng(seed).standard_normal((n, n))
+
+
+def check_sigma(req, atol_scale=1e-10):
+    s0 = np.linalg.svd(req.matrix, compute_uv=False)
+    np.testing.assert_allclose(req.sigma, s0, atol=atol_scale * s0[0])
+
+
+# ---------------------------------------------------------------------------
+# sync engine: admission edges + FIFO/error regressions
+# ---------------------------------------------------------------------------
+
+def test_empty_step_is_noop():
+    eng = SVDEngine(cfg4())
+    assert eng.step() == 0
+    assert eng.calls == 0 and eng.finished == []
+    assert eng.metrics.snapshot()["batches"] == 0
+
+
+def test_oversize_bucket_splits_at_max_batch():
+    eng = SVDEngine(cfg4(max_batch=4))
+    for i in range(10):
+        eng.submit(SVDRequest(uid=i, matrix=dense(i), bw=4))
+    done = eng.run()
+    assert len(done) == 10 and eng.calls == 3          # 4 + 4 + 2
+    snap = eng.metrics.snapshot()
+    assert snap["served_slots"] == 10 and snap["padded_slots"] == 2
+    for r in done:
+        check_sigma(r)
+
+
+def test_fifo_completion_order_within_bucket():
+    """Regression: results complete in submission order, across splits."""
+    eng = SVDEngine(cfg4(max_batch=4))
+    for i in range(9):
+        eng.submit(SVDRequest(uid=i, matrix=dense(i), bw=4))
+    done = eng.run()
+    assert [r.uid for r in done] == list(range(9))
+
+
+def test_mixed_dtype_requests_never_share_a_bucket():
+    eng = SVDEngine(cfg4(max_batch=8))
+    for i in range(2):
+        eng.submit(SVDRequest(uid=i, matrix=dense(i), bw=4))
+    for i in range(2, 4):
+        eng.submit(SVDRequest(uid=i, matrix=dense(i).astype(np.float32),
+                              bw=4))
+    assert len(eng.buckets) == 2                      # dtype splits the key
+    done = eng.run()
+    assert eng.calls == 2 and len(done) == 4          # one flush per dtype
+    for r in done:
+        assert r.sigma.dtype == r.matrix.dtype
+        check_sigma(r, atol_scale=1e-10 if r.matrix.dtype == np.float64
+                    else 1e-5)
+
+
+def test_per_request_error_surfaces_on_request_not_step():
+    """Regression: an un-servable bucket (VMEM-infeasible bw) must fail its
+    OWN requests via ``req.error`` — never raise out of step()/run() or
+    poison other buckets, and never silently drop requests."""
+    eng = SVDEngine(cfg4())
+    bad = SVDRequest(uid=7, matrix=np.zeros((4096, 4096), np.float32),
+                     bw=4096)
+    eng.submit(SVDRequest(uid=0, matrix=dense(0), bw=4))
+    eng.submit(bad)
+    eng.submit(SVDRequest(uid=1, matrix=dense(1), bw=4))
+    done = eng.run()
+    assert len(done) == 3 and eng.pending() == 0
+    assert bad.done and isinstance(bad.error, ValueError)
+    assert bad.sigma is None
+    good = [r for r in done if r.error is None]
+    assert [r.uid for r in good] == [0, 1]            # FIFO kept around error
+    for r in good:
+        check_sigma(r)
+    snap = eng.metrics.snapshot()
+    assert snap["completed"] == 2 and snap["failed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# async engine
+# ---------------------------------------------------------------------------
+
+def test_async_burst_all_futures_resolve():
+    with AsyncSVDEngine(cfg4(), batch_window_s=0.003) as eng:
+        futs = [eng.submit(SVDRequest(uid=i, matrix=dense(i), bw=4))
+                for i in range(9)]
+        done = [f.result(timeout=300) for f in futs]
+    for r in done:
+        assert r.done and r.error is None
+        check_sigma(r)
+    snap = eng.metrics.snapshot()
+    assert snap["completed"] == 9 and snap["queue_depth"] == 0
+
+
+def test_async_submit_from_many_threads_exactly_once():
+    """Thread-safety + exactly-once delivery: every future resolves with
+    its own request, and completion callbacks fire once per future."""
+    eng = AsyncSVDEngine(cfg4(), batch_window_s=0.002)
+    nthreads, per = 6, 5
+    futs = {}
+    fired = []
+    lock = threading.Lock()
+
+    def client(t):
+        for j in range(per):
+            uid = t * per + j
+            f = eng.submit(SVDRequest(uid=uid, matrix=dense(uid), bw=4))
+            f.add_done_callback(lambda _f: fired.append(1))
+            with lock:
+                futs[uid] = f
+
+    threads = [threading.Thread(target=client, args=(t,))
+               for t in range(nthreads)]
+    [t.start() for t in threads]
+    [t.join() for t in threads]
+    done = {uid: f.result(timeout=300) for uid, f in futs.items()}
+    eng.stop()
+    assert len(done) == nthreads * per
+    for uid, r in done.items():
+        assert r.uid == uid and r.error is None       # own request came back
+        check_sigma(r)
+    assert len(fired) == nthreads * per               # one callback per future
+    snap = eng.metrics.snapshot()
+    assert snap["submitted"] == nthreads * per
+    assert snap["completed"] == nthreads * per
+    assert snap["failed"] == snap["timed_out"] == snap["rejected"] == 0
+    assert snap["served_slots"] == nthreads * per
+
+
+def test_async_deadline_times_out_queued_request():
+    eng = AsyncSVDEngine(cfg4(), batch_window_s=30.0)   # never ripe
+    fut = eng.submit(SVDRequest(uid=0, matrix=dense(0), bw=4),
+                     timeout_s=0.05)
+    with pytest.raises(TimeoutError):
+        fut.result(timeout=60)
+    eng.stop()
+    req_done = eng.finished[0]
+    assert isinstance(req_done.error, TimeoutError) and req_done.done
+    snap = eng.metrics.snapshot()
+    assert snap["timed_out"] == 1 and snap["completed"] == 0
+    assert snap["failed"] == 0                          # timeout != failure
+
+
+def test_async_queue_full_rejects_at_admission():
+    eng = AsyncSVDEngine(cfg4(max_batch=8), batch_window_s=30.0,
+                         max_pending=2)
+    f1 = eng.submit(SVDRequest(uid=0, matrix=dense(0), bw=4))
+    f2 = eng.submit(SVDRequest(uid=1, matrix=dense(1), bw=4))
+    f3 = eng.submit(SVDRequest(uid=2, matrix=dense(2), bw=4))
+    with pytest.raises(QueueFullError):
+        f3.result(timeout=60)
+    eng.stop(drain=True)                                # serves the queue
+    assert f1.result(timeout=60).error is None
+    assert f2.result(timeout=60).error is None
+    assert eng.metrics.snapshot()["rejected"] == 1
+
+
+def test_async_nonsquare_rejected_via_future():
+    eng = AsyncSVDEngine(cfg4())
+    fut = eng.submit(SVDRequest(uid=0, matrix=np.zeros((4, 6)), bw=2))
+    with pytest.raises(ValueError, match="square"):
+        fut.result(timeout=60)
+    eng.stop()
+
+
+def test_async_stop_without_drain_cancels_pending():
+    eng = AsyncSVDEngine(cfg4(), batch_window_s=30.0)
+    fut = eng.submit(SVDRequest(uid=0, matrix=dense(0), bw=4))
+    eng.stop(drain=False)
+    with pytest.raises(Exception):                      # CancelledError
+        fut.result(timeout=60)
+    f2 = eng.submit(SVDRequest(uid=1, matrix=dense(1), bw=4))
+    with pytest.raises(RuntimeError, match="stopped"):
+        f2.result(timeout=60)
+
+
+def test_async_asyncio_bridge():
+    async def drive():
+        with AsyncSVDEngine(cfg4(), batch_window_s=0.002) as eng:
+            aws = [eng.submit_async(SVDRequest(uid=i, matrix=dense(i), bw=4))
+                   for i in range(5)]
+            return await asyncio.gather(*aws)
+
+    done = asyncio.run(drive())
+    assert len(done) == 5
+    for r in done:
+        check_sigma(r)
+
+
+def test_async_window_expired_bucket_beats_full_bucket():
+    """Fairness: a request past its batch_window_s dispatches before a
+    continuously-full hot bucket — the window is a latency BOUND, not a
+    hint (no worker started: _admit_locked is exercised directly)."""
+    eng = AsyncSVDEngine(cfg4(max_batch=4), batch_window_s=0.2)
+    now = time.monotonic()
+    lone = SVDRequest(uid=99, matrix=dense(99, n=24), bw=4)
+    lone.arrived = now - 1.0                    # long past the window
+    SVDEngine.submit(eng, lone)
+    for i in range(4):                          # hot bucket at capacity
+        r = SVDRequest(uid=i, matrix=dense(i), bw=4)
+        r.arrived = now
+        SVDEngine.submit(eng, r)
+    key, _cfg, reqs, _delay, to_fail = eng._admit_locked(now)
+    assert reqs is not None and [r.uid for r in reqs] == [99], (key, reqs)
+    assert not to_fail
+
+
+def test_async_micro_batch_window_aggregates():
+    """Requests trickling in faster than the window flushes co-batch: far
+    fewer pipeline calls than requests."""
+    eng = AsyncSVDEngine(cfg4(max_batch=8), batch_window_s=0.25)
+    futs = []
+    for i in range(8):
+        futs.append(eng.submit(SVDRequest(uid=i, matrix=dense(i), bw=4)))
+        time.sleep(0.005)
+    [f.result(timeout=300) for f in futs]
+    eng.stop()
+    snap = eng.metrics.snapshot()
+    assert snap["batches"] <= 3                         # not 8 serial calls
+    assert snap["batch_fill_ratio"] >= 0.3
+
+
+# ---------------------------------------------------------------------------
+# mesh plumbing
+# ---------------------------------------------------------------------------
+
+def test_shard_pad():
+    from repro.core.distributed import shard_pad
+    assert shard_pad(8, 4) == 0
+    assert shard_pad(9, 4) == 3
+    assert shard_pad(1, 8) == 7
+    assert shard_pad(5, 1) == 0
+
+
+def test_serve_mesh_unset_env_is_none(monkeypatch):
+    from repro.launch.mesh import serve_mesh
+    monkeypatch.delenv("REPRO_SERVE_MESH", raising=False)
+    assert serve_mesh() is None
+
+
+def test_serve_mesh_single_device_degrades_to_none(monkeypatch):
+    # On a 1-device host (or a pre-AxisType jax) the sharded path is
+    # unreachable; the engine must get None and serve locally.
+    from repro.launch.mesh import serve_mesh
+    monkeypatch.setenv("REPRO_SERVE_MESH", "1")
+    assert serve_mesh() is None
+    monkeypatch.setenv("REPRO_SERVE_MESH", "")
+    assert serve_mesh() is None
+
+
+@needs_axis_type
+def test_async_sharded_dispatch_8dev(subproc):
+    """Full buckets batch-shard across 8 (fake) devices: results match the
+    oracle, padding to shard divisibility is sliced off, and the metrics
+    record the mesh path."""
+    code = """
+import os, numpy as np, jax
+jax.config.update("jax_enable_x64", True)
+os.environ["REPRO_SERVE_MESH"] = "auto"
+from repro.core.tuning import PipelineConfig
+from repro.launch.mesh import serve_mesh
+from repro.serve import AsyncSVDEngine, SVDRequest
+mesh = serve_mesh()
+assert mesh is not None and mesh.devices.size == 8, mesh
+cfg = PipelineConfig.resolve(bw=4, tw=2, backend="ref", dtype=np.float64,
+                             max_batch=6)   # 6 reqs -> pad 2 for 8 shards
+rng = np.random.default_rng(0)
+with AsyncSVDEngine(cfg, mesh=mesh, batch_window_s=0.005) as eng:
+    futs = [eng.submit(SVDRequest(uid=i,
+                                  matrix=rng.standard_normal((16, 16)),
+                                  bw=4))
+            for i in range(6)]
+    done = [f.result(timeout=600) for f in futs]
+for r in done:
+    s0 = np.linalg.svd(r.matrix, compute_uv=False)
+    assert np.abs(r.sigma - s0).max() < 1e-10 * s0[0]
+snap = eng.metrics.snapshot()
+assert snap["sharded_batches"] >= 1, snap
+print("SHARDED_SERVE_OK", snap["sharded_batches"])
+"""
+    r = subproc(code, devices=8, timeout=600)
+    assert "SHARDED_SERVE_OK" in r.stdout, (r.stdout[-500:], r.stderr[-2000:])

@@ -3,7 +3,6 @@ synthetic A = U diag(sigma) V^T with prescribed spectra (arithmetic /
 logarithmic / quarter-circle), reduced-precision stage 2, fp64 stage 3."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -16,7 +16,6 @@ first principles:
 """
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
