@@ -1,0 +1,110 @@
+"""Fused small-n tier vs the staged pipeline (DESIGN.md §13).
+
+Two measurements:
+
+* **Per-n crossover sweep** — the same dense ``(B, n, n)`` stack through
+  ``core.svd.svd_batched`` twice: ``backend="fused_small"`` (the whole
+  per-matrix pipeline as one dispatch) vs the staged platform default.
+  The derived column carries the speedup; the largest winning n is the
+  measured crossover the autotuner persists
+  (``python -m repro.autotune --fused-crossover``).
+
+* **Serve p99 with the tier on vs off** — the serve_load Poisson harness
+  run twice on the same small-n mix, ``fused_n_max`` at the default vs 0
+  (tier disabled), isolating what the one-dispatch tier buys an actual
+  B-heavy serving workload end to end.
+
+  PYTHONPATH=src python -m benchmarks.run --only fused_small [--smoke]
+  PYTHONPATH=src python benchmarks/fused_small.py
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+if __package__ in (None, ""):                 # direct script execution
+    _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _REPO)
+    sys.path.insert(0, os.path.join(_REPO, "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+
+SWEEP_NS = (16, 32, 64, 128, 256)
+SMOKE_NS = (16, 32)
+BW = 8
+SMOKE_BW = 4
+BATCH = 8
+
+
+def sweep(ns, bw, *, batch=BATCH, dtype=np.float64, seed=0):
+    """Fused vs staged per-matrix wall time over the n sweep."""
+    from repro.core import svd as svdmod
+    from repro.core.tuning import PipelineConfig
+
+    out = []
+    fused_n_max = 0
+    for n in ns:
+        bw_eff = max(1, min(bw, max(n - 1, 1)))
+        mats = jnp.asarray(np.random.default_rng(seed)
+                           .standard_normal((batch, n, n)).astype(dtype))
+        cfg_f = PipelineConfig.resolve(bw=bw_eff, dtype=dtype, n=n,
+                                       backend="fused_small")
+        cfg_s = PipelineConfig.resolve(bw=bw_eff, dtype=dtype, n=n)
+
+        t_fused = timeit(lambda m=mats, c=cfg_f: svdmod.svd_batched(m, c))
+        t_staged = timeit(lambda m=mats, c=cfg_s: svdmod.svd_batched(m, c))
+        speedup = t_staged / t_fused
+        if t_fused < t_staged:
+            fused_n_max = n
+        out.append(row(f"fused_small/fused/n{n}/bw{bw_eff}/B{batch}",
+                       t_fused / batch * 1e6,
+                       f"mats_per_s={batch / t_fused:.2f};"
+                       f"speedup={speedup:.2f}x"))
+        out.append(row(f"fused_small/staged/n{n}/bw{bw_eff}/B{batch}",
+                       t_staged / batch * 1e6,
+                       f"mats_per_s={batch / t_staged:.2f}"))
+    out.append(row(f"fused_small/crossover/bw{bw}", 0.0,
+                   f"measured_fused_n_max={fused_n_max}"))
+    return out
+
+
+def serve_p99_on_off(*, smoke=True, seed=0):
+    """Serve-tier p99 with the fused tier on (default routing) vs off
+    (``fused_n_max=0``), same mix, same arrival process."""
+    from benchmarks import serve_load
+
+    mix = serve_load.SMOKE_MIX
+    count, rate = (12, 120.0) if smoke else (48, 60.0)
+    out = []
+    for tag, fmax in (("on", None), ("off", 0)):
+        prows, poi = serve_load.poisson_run(mix, count, rate, backend="ref",
+                                            seed=seed, fused_n_max=fmax)
+        p = poi["latency_ms"]
+        tiers = poi["engine_metrics"].get("tiers", {})
+        fused_b = tiers.get("fused", {}).get("batches", 0)
+        out.append(row(f"fused_small/serve_p99/{tag}", p["p99"] * 1e3,
+                       f"p50={p['p50']:.1f}ms;p99={p['p99']:.1f}ms;"
+                       f"thpt={poi['throughput_rps']:.1f}rps;"
+                       f"fused_batches={fused_b}"))
+    return out
+
+
+def run(smoke: bool = False):
+    ns = SMOKE_NS if smoke else SWEEP_NS
+    bw = SMOKE_BW if smoke else BW
+    out = sweep(ns, bw)
+    out += serve_p99_on_off(smoke=True)       # smoke-sized either way: the
+    return out                                # sweep above owns the full axis
+
+
+if __name__ == "__main__":
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    print("name,us_per_call,derived")
+    for line in run():
+        print(line, flush=True)

@@ -48,7 +48,8 @@ import jax.numpy as jnp
 jax.config.update("jax_enable_x64", True)
 
 SUITES = ["accuracy", "hyperparams", "occupancy", "scaling", "precision",
-          "kernels_bench", "fusion", "batched", "vectors", "serve_load"]
+          "kernels_bench", "fusion", "batched", "vectors", "fused_small",
+          "serve_load"]
 
 
 def _supports_smoke(fn) -> bool:

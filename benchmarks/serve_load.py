@@ -133,7 +133,7 @@ def _engine_cfgs(eng, reqs):
 
 
 def throughput_compare(mix, count, *, backend="ref", seed=0, window_s=0.002,
-                       autotune_cache=None):
+                       autotune_cache=None, fused_n_max=None):
     """Serial vs micro-batched engine throughput on an identical workload.
 
     Returns ``(rows, result)`` — CSV rows plus a dict with the speedup and
@@ -153,7 +153,8 @@ def throughput_compare(mix, count, *, backend="ref", seed=0, window_s=0.002,
     eng = AsyncSVDEngine(backend=backend, batch_window_s=window_s,
                          autotune=autotune_cache is not None,
                          autotune_cache=autotune_cache,
-                         max_batch=32 if autotune_cache else None)
+                         max_batch=32 if autotune_cache else None,
+                         fused_n_max=fused_n_max)
     cfgs = _engine_cfgs(eng, reqs_engine)
 
     # Warm every compiled program OUTSIDE the timed windows (bucket-capacity
@@ -223,7 +224,7 @@ def throughput_compare(mix, count, *, backend="ref", seed=0, window_s=0.002,
 
 
 def poisson_run(mix, count, rate, *, backend="ref", seed=0, window_s=0.005,
-                timeout_s=None, autotune_cache=None):
+                timeout_s=None, autotune_cache=None, fused_n_max=None):
     """Open-loop Poisson arrivals at ``rate`` req/s; per-request latency.
 
     Returns ``(rows, result)``; ``result`` carries the latency percentiles,
@@ -240,7 +241,8 @@ def poisson_run(mix, count, rate, *, backend="ref", seed=0, window_s=0.005,
                          default_timeout_s=timeout_s,
                          autotune=autotune_cache is not None,
                          autotune_cache=autotune_cache,
-                         max_batch=32 if autotune_cache else None)
+                         max_batch=32 if autotune_cache else None,
+                         fused_n_max=fused_n_max)
     # Warm every bucket's compile outside the timed run (never under the
     # engine's default deadline — compiles take seconds).
     [f.result() for f in [eng.submit(r, timeout_s=float("inf"))
@@ -391,6 +393,21 @@ def main(argv=None) -> None:
         if poi[what]:
             failures.append(f"{poi[what]} request(s) {what} "
                             f"(must be 0)")
+    if args.smoke:
+        # Fused-tier routing (DESIGN.md §13): every smoke-mix bucket is
+        # small-n (n <= DEFAULT_FUSED_CROSSOVER), so the metrics MUST show
+        # it served on the fused one-dispatch tier — this is the CI
+        # assertion that the serve path actually exercises the tier, not
+        # just that the backend exists.
+        from repro.core.tuning import DEFAULT_FUSED_CROSSOVER
+        snap = poi["engine_metrics"]
+        for key, info in snap.get("bucket_tiers", {}).items():
+            if info["n"] <= DEFAULT_FUSED_CROSSOVER and info["tier"] != "fused":
+                failures.append(f"bucket {key} (n={info['n']}) served on "
+                                f"{info['tier']!r}, expected 'fused'")
+        if not snap.get("tiers", {}).get("fused", {}).get("batches"):
+            failures.append("no fused-tier dispatches recorded in the smoke "
+                            "run (tiers metrics empty)")
     if p99_budget and poi["latency_ms"]["p99"] > p99_budget:
         failures.append(f"p99 latency {poi['latency_ms']['p99']:.1f}ms "
                         f"> budget {p99_budget:g}ms")

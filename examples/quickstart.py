@@ -151,3 +151,30 @@ print(f"async serve: {len(done)} concurrent requests in "
 assert len(done) == 12 and worst < 1e-10
 assert snap["completed"] == 12 and snap["failed"] == 0
 print("OK")
+
+# --- 8. fused small-n tier: the whole pipeline as ONE dispatch ---------------
+# (DESIGN.md §13)  Below the fused crossover the staged pipeline's per-stage
+# dispatches are pure overhead on a VMEM-resident problem: backend
+# "fused_small" runs band reduction, the whole bulge chase, and the Sturm
+# bisection in a single kernel dispatch per (B, n, n) stack.  The serve
+# engines route n <= fused_n_max buckets there automatically (tuned via
+# `python -m repro.autotune --fused-crossover`); metrics attribute every
+# dispatch per tier.
+fcfg = PipelineConfig.resolve(bw=8, dtype=jnp.float64, n=k,
+                              backend="fused_small")
+sigma8 = np.asarray(svd_batched(jnp.asarray(stack), config=fcfg))
+print(f"fused_small tier: max |sigma - staged| = "
+      f"{np.abs(sigma8 - sigma3).max():.2e}")
+assert np.abs(sigma8 - sigma3).max() < 1e-12
+
+with AsyncSVDEngine(serve_cfg, batch_window_s=0.005) as eng:
+    f = eng.submit(SVDRequest(uid=0, matrix=rng.standard_normal((24, 24)),
+                              bw=4))
+    f.result()
+snap = eng.metrics.snapshot()
+tier = next(iter(snap["bucket_tiers"].values()))
+print(f"serve routing: n=24 bucket -> tier={tier['tier']!r} "
+      f"(backend={tier['backend']}), fused batches = "
+      f"{snap['tiers']['fused']['batches']}")
+assert tier["tier"] == "fused" and snap["tiers"]["fused"]["batches"] >= 1
+print("OK")

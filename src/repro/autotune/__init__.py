@@ -21,18 +21,24 @@ consumes the cache (analytic defaults on a miss).
 """
 
 from repro.autotune import cache, measure, model, search
-from repro.autotune.cache import cache_path, lookup, store
+from repro.autotune.cache import (cache_path, lookup, lookup_crossover,
+                                  store, store_crossover)
 from repro.autotune.measure import measure_seconds, time_stage2
 from repro.autotune.model import (DeviceProfile, PROFILES, device_kind,
-                                  pipeline_cost, profile_for, stage_cost,
-                                  total_chase_cycles)
-from repro.autotune.search import Candidate, SearchResult, search as run_search
+                                  fused_cost, pipeline_cost,
+                                  predicted_crossover, profile_for,
+                                  stage_cost, total_chase_cycles)
+from repro.autotune.search import (Candidate, FusedCrossoverResult,
+                                   SearchResult, search as run_search,
+                                   search_fused_crossover)
 
 __all__ = [
     "cache", "measure", "model", "search",
-    "cache_path", "lookup", "store",
+    "cache_path", "lookup", "store", "lookup_crossover", "store_crossover",
     "measure_seconds", "time_stage2",
     "DeviceProfile", "PROFILES", "device_kind", "pipeline_cost",
     "profile_for", "stage_cost", "total_chase_cycles",
+    "fused_cost", "predicted_crossover",
     "Candidate", "SearchResult", "run_search",
+    "FusedCrossoverResult", "search_fused_crossover",
 ]

@@ -67,6 +67,10 @@ def main(argv=None) -> int:
                          f"{cache_mod.cache_path()})")
     ap.add_argument("--no-store", action="store_true",
                     help="print the table only; do not write the cache")
+    ap.add_argument("--fused-crossover", action="store_true",
+                    help="instead of the (tw, fuse, batch) grid, measure the "
+                         "fused-vs-staged crossover per --shapes bw "
+                         "(DESIGN.md §13) and persist fused_n_max")
     args = ap.parse_args(argv)
 
     dtype = jnp.dtype(args.dtype)
@@ -85,6 +89,31 @@ def main(argv=None) -> int:
     prof = model_mod.profile_for(kind)
     print(f"# autotune device={kind} profile={prof.device_kind} "
           f"backend={backend} dtype={dtype.name}", flush=True)
+
+    if args.fused_crossover:
+        # One sweep per distinct bw; the shape's n caps the sweep.  The
+        # result is stored under BOTH the bw-specific and the device-wide
+        # crossover key (lookup_crossover prefers the specific one).
+        caps: dict[int, int] = {}
+        for n, bw in parse_shapes(args.shapes):
+            caps[bw] = max(caps.get(bw, 0), n)
+        for bw, n_cap in sorted(caps.items()):
+            ns = tuple(x for x in (16, 32, 64, 128, 256, 384, 512)
+                       if x <= n_cap) or (n_cap,)
+            res = search_mod.search_fused_crossover(
+                bw, dtype=dtype, compute_uv=args.compute_uv, ns=ns,
+                batch=max(batches), profile=prof, warmup=args.warmup,
+                iters=args.iters)
+            print(res.table(), flush=True)
+            if args.no_store:
+                continue
+            for key_bw in (bw, None):
+                dest = cache_mod.store_crossover(
+                    res.to_entry(), device_kind=kind, dtype=dtype.name,
+                    compute_uv=args.compute_uv, bw=key_bw, path=path)
+            print(f"# cached fused_n_max={res.fused_n_max} -> {dest}",
+                  flush=True)
+        return 0
 
     for n, bw in parse_shapes(args.shapes):
         res = search_mod.search(n, bw, dtype=dtype, backend=backend,

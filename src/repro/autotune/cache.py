@@ -24,7 +24,8 @@ import tempfile
 import time
 
 __all__ = ["ENV_VAR", "SCHEMA_VERSION", "cache_path", "make_key",
-           "load", "lookup", "store"]
+           "load", "lookup", "store", "crossover_key", "lookup_crossover",
+           "store_crossover"]
 
 ENV_VAR = "REPRO_AUTOTUNE_CACHE"
 SCHEMA_VERSION = 1
@@ -105,6 +106,80 @@ def store(entry: dict, *, device_kind: str, n: int, bw: int, dtype: str,
     entry.setdefault("tuned_at_unix", int(time.time()))
     doc["entries"][make_key(device_kind=device_kind, n=n, bw=bw, dtype=dtype,
                             compute_uv=compute_uv, backend=backend)] = entry
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(p) or ".",
+                               prefix=".cache-", suffix=".json.tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, p)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Fused-tier crossover entries (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+#
+# The fused-vs-staged crossover is a property of (device, dtype, uv[, bw]),
+# not of one (n, bw) shape, so it gets its own key family in the SAME
+# entries dict ("crossover|..." never collides with make_key's "device=..."
+# namespace, and the per-shape ``lookup`` validation — which demands tw/fuse
+# — never sees these entries).
+
+def crossover_key(*, device_kind: str, dtype: str, compute_uv: bool,
+                  bw: int | None = None) -> str:
+    key = (f"crossover|device={device_kind}|dtype={dtype}"
+           f"|uv={int(bool(compute_uv))}")
+    if bw is not None:
+        key += f"|bw={int(bw)}"
+    return key
+
+
+def lookup_crossover(*, device_kind: str, dtype: str, compute_uv: bool,
+                     bw: int | None = None, path: str | None = None
+                     ) -> int | None:
+    """The tuned fused-tier crossover n, or None (use the static default).
+
+    Looks for the bw-specific entry first, then the device/dtype-wide one —
+    a tuner run with ``--fused-crossover`` stores under the exact bw it
+    measured AND the wide key, so engines serving other bandwidths still
+    get a measured figure.
+    """
+    entries = load(path)["entries"]
+    keys = []
+    if bw is not None:
+        keys.append(crossover_key(device_kind=device_kind, dtype=dtype,
+                                  compute_uv=compute_uv, bw=bw))
+    keys.append(crossover_key(device_kind=device_kind, dtype=dtype,
+                              compute_uv=compute_uv))
+    for key in keys:
+        entry = entries.get(key)
+        if (isinstance(entry, dict)
+                and isinstance(entry.get("fused_n_max"), int)
+                and entry["fused_n_max"] >= 0):
+            return entry["fused_n_max"]
+    return None
+
+
+def store_crossover(entry: dict, *, device_kind: str, dtype: str,
+                    compute_uv: bool, bw: int | None = None,
+                    path: str | None = None) -> str:
+    """Merge one crossover entry (``{"fused_n_max": int, ...}``) into the
+    cache, atomically, under the (optionally bw-specific) crossover key."""
+    assert isinstance(entry.get("fused_n_max"), int), entry
+    p = cache_path(path)
+    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+    doc = load(p)
+    entry = dict(entry)
+    entry.setdefault("tuned_at_unix", int(time.time()))
+    doc["entries"][crossover_key(device_kind=device_kind, dtype=dtype,
+                                 compute_uv=compute_uv, bw=bw)] = entry
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(p) or ".",
                                prefix=".cache-", suffix=".json.tmp")
     try:

@@ -45,6 +45,7 @@ from repro.roofline import hw
 __all__ = [
     "DeviceProfile", "PROFILES", "device_kind", "profile_for",
     "total_chase_cycles", "CostBreakdown", "stage_cost", "pipeline_cost",
+    "fused_cost", "predicted_crossover", "FUSED_FAST_BW_RATIO",
 ]
 
 
@@ -209,3 +210,94 @@ def pipeline_cost(n: int, bw: int, tw: int, *, fuse: int = 1, batch: int = 1,
             return math.inf
         total += c.seconds
     return total
+
+
+# ---------------------------------------------------------------------------
+# Fused small-n tier (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+# Fast-memory (VMEM / L1-resident) streaming advantage over slow memory the
+# fused kernel's in-place reflector applies enjoy.  Deliberately coarse —
+# the term it scales is only compared against the staged path's
+# launch-dominated cost, where the crossover is decided by the dispatch
+# count, not by a few percent of compute time.
+FUSED_FAST_BW_RATIO = 8.0
+
+
+def fused_cost(n: int, bw: int, *, batch: int = 1, dtype=jnp.float32,
+               profile: DeviceProfile | None = None,
+               compute_uv: bool = False) -> CostBreakdown:
+    """Predicted wall seconds of ONE fused_small dispatch over a (B, n, n)
+    stack — the whole pipeline (stage 1 + every chase cycle + bisection)
+    as a single launch with the matrix fast-memory resident.
+
+    * ONE ``launch_overhead_s`` total — the entire point of the tier; the
+      staged path pays one per super-cycle (``stage_cost``).
+    * slow-memory traffic: the stack streamed in and the results out, once.
+    * in-kernel work: each reflector cycle touches the (n, n) working set a
+      few times (extract, matvec, rank-1 update, fix) served from fast
+      memory at ``FUSED_FAST_BW_RATIO * mem_bw``; ``compute_uv`` triples it
+      (A plus the two accumulators); the values path adds the vectorized
+      bisection sweep.
+    * infeasible when ``tuning.fused_working_set_bytes`` misses the
+      profile's fast-memory budget (no fallback tiling in this tier).
+    """
+    prof = profile if profile is not None else profile_for()
+    assert batch >= 1, batch
+    s = jnp.dtype(dtype).itemsize
+    bw_eff = max(1, min(bw, max(n - 1, 1)))
+    vmem = tuning.fused_working_set_bytes(n, dtype, compute_uv=compute_uv)
+    feasible = vmem <= prof.fast_mem_bytes
+    cyc2 = (total_chase_cycles(n, bw_eff, bw_eff - 1)
+            if bw_eff >= 2 and n >= 3 else 0)
+    cycles = max(n - 1, 0) + cyc2
+    io_words = n * n + n + (2 * n * n + 2 * n if compute_uv else 0)
+    bytes_moved = float(batch) * io_words * s
+    work_words = cycles * 6.0 * n * n * (3.0 if compute_uv else 1.0)
+    if not compute_uv:
+        max_iter = 60 if jnp.dtype(dtype).itemsize == 8 else 40
+        work_words += max_iter * (2.0 * n) * (2.0 * n)   # Sturm bisection
+    par = max(1.0, min(float(batch), float(prof.execution_units)))
+    occupancy = max(min(1.0, batch / prof.execution_units),
+                    1.0 / prof.execution_units)
+    t_mem = bytes_moved / prof.mem_bw
+    t_compute = (batch * work_words * s
+                 / (FUSED_FAST_BW_RATIO * prof.mem_bw) / par)
+    t_launch = prof.launch_overhead_s
+    total = (t_mem + t_compute + t_launch) if feasible else math.inf
+    return CostBreakdown(seconds=total, mem_seconds=t_mem + t_compute,
+                         launch_seconds=t_launch, bytes_moved=bytes_moved,
+                         cycles=cycles, supercycles=1, wavefront=1,
+                         occupancy=occupancy, vmem_bytes=vmem,
+                         feasible=feasible)
+
+
+def predicted_crossover(bw: int, *, dtype=jnp.float32, batch: int = 8,
+                        profile: DeviceProfile | None = None,
+                        compute_uv: bool = False,
+                        ns: tuple[int, ...] = (8, 16, 24, 32, 48, 64, 96,
+                                               128, 192, 256, 384, 512, 768,
+                                               1024)) -> int:
+    """Model-predicted fused-vs-staged crossover: the largest n in ``ns``
+    where the fused tier's per-matrix cost beats the staged stage-2 cost.
+
+    Conservative by construction — the staged side is charged for stage 2
+    only (its dispatch-dominated core) while the fused side carries the
+    whole pipeline, so a real measurement can only move the crossover UP.
+    Seeds ``search.search_fused_crossover``; 0 means "never fused".
+    """
+    prof = profile if profile is not None else profile_for()
+    best = 0
+    for n in sorted(ns):
+        bw_eff = max(1, min(bw, max(n - 1, 1)))
+        fc = fused_cost(n, bw_eff, batch=batch, dtype=dtype, profile=prof,
+                        compute_uv=compute_uv)
+        if not fc.feasible:
+            break
+        tw = max(1, min(tuning.default_tilewidth(bw_eff, dtype),
+                        max(bw_eff - 1, 1)))
+        staged = pipeline_cost(n, bw_eff, tw, fuse=1, batch=batch,
+                               dtype=dtype, profile=prof, tape=compute_uv)
+        if fc.seconds < staged:
+            best = n
+    return best

@@ -26,7 +26,8 @@ from repro.autotune import measure as measure_mod
 from repro.autotune import model as model_mod
 from repro.core import tuning
 
-__all__ = ["Candidate", "SearchResult", "candidate_grid", "search"]
+__all__ = ["Candidate", "SearchResult", "candidate_grid", "search",
+           "FusedCrossoverResult", "search_fused_crossover"]
 
 
 @dataclasses.dataclass
@@ -212,3 +213,115 @@ def search(n: int, bw: int, *, dtype=jnp.float32, backend: str = "ref",
                         candidates=cands, measured=to_time, best=best,
                         default=default,
                         batch_searched=len(set(batches)) > 1)
+
+
+# ---------------------------------------------------------------------------
+# Fused-tier crossover search (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FusedCrossoverResult:
+    """Measured fused-vs-staged crossover for one (device, dtype, uv, bw).
+
+    ``points`` holds ``(n, fused_s, staged_s)`` per-matrix seconds for every
+    n actually measured; ``fused_n_max`` is the largest measured n where the
+    fused tier won (0 = never — the staged pipeline wins everywhere).
+    ``predicted_n_max`` is the analytic model's figure
+    (``model.predicted_crossover``) for the same setting, kept alongside so
+    a wildly wrong model is visible in the cache entry itself.
+    """
+    bw: int
+    dtype: str
+    compute_uv: bool
+    device_kind: str
+    points: list[tuple[int, float, float]]
+    fused_n_max: int
+    predicted_n_max: int
+
+    def table(self) -> str:
+        lines = [f"fused crossover bw={self.bw} dtype={self.dtype} "
+                 f"uv={self.compute_uv} device={self.device_kind}",
+                 f"{'n':>5} {'fused_us':>10} {'staged_us':>10} {'winner':>7}"]
+        for n, fused_s, staged_s in self.points:
+            win = "fused" if fused_s < staged_s else "staged"
+            lines.append(f"{n:>5} {fused_s * 1e6:10.1f} "
+                         f"{staged_s * 1e6:10.1f} {win:>7}")
+        lines.append(f"measured fused_n_max={self.fused_n_max} "
+                     f"(model predicted {self.predicted_n_max})")
+        return "\n".join(lines)
+
+    def to_entry(self) -> dict:
+        """The persistent-cache payload (``cache.store_crossover``)."""
+        return {
+            "fused_n_max": int(self.fused_n_max),
+            "predicted_n_max": int(self.predicted_n_max),
+            "points": [{"n": int(n),
+                        "fused_us": round(f * 1e6, 3),
+                        "staged_us": round(s * 1e6, 3)}
+                       for n, f, s in self.points],
+            "schema": 1,
+        }
+
+
+def search_fused_crossover(bw: int, *, dtype=jnp.float32,
+                           compute_uv: bool = False,
+                           ns: tuple[int, ...] = (16, 32, 64, 128, 256,
+                                                  384, 512),
+                           batch: int = 8, warmup: int = 1, iters: int = 2,
+                           seed: int = 0,
+                           profile: model_mod.DeviceProfile | None = None,
+                           measure_fn=None) -> FusedCrossoverResult:
+    """Measure the fused-vs-staged per-matrix crossover on this device.
+
+    Walks ``ns`` ascending, timing the SAME dense random stack through the
+    whole pipeline twice — once with ``backend="fused_small"``, once with
+    the staged platform default — via ``core.svd.svd_batched``.  Stops at
+    the first n the fused VMEM budget rejects (larger n only get worse).
+    ``measure_fn(n, fused) -> seconds (whole batched call)`` is injectable
+    for tests.  The result's ``.to_entry()`` feeds
+    ``cache.store_crossover``; the serve engines consume it through
+    ``cache.lookup_crossover``.
+    """
+    from repro.core import svd as svd_mod   # deferred: keep import light
+
+    prof = profile if profile is not None else model_mod.profile_for()
+    dname = jnp.dtype(dtype).name
+
+    if measure_fn is None:
+        import numpy as np
+
+        def measure_fn(n, fused):
+            bw_eff = max(1, min(bw, max(n - 1, 1)))
+            cfg = tuning.PipelineConfig.resolve(
+                bw=bw_eff, dtype=dtype, n=n, compute_uv=compute_uv,
+                backend="fused_small" if fused else "auto")
+            rng = np.random.default_rng(seed)
+            a = jnp.asarray(rng.standard_normal((batch, n, n)).astype(dname))
+
+            def call():
+                return svd_mod.svd_batched(a, cfg, compute_uv=compute_uv)
+
+            return measure_mod.measure_seconds(call, warmup=warmup,
+                                               iters=iters)
+
+    points: list[tuple[int, float, float]] = []
+    fused_n_max = 0
+    for n in sorted(set(int(x) for x in ns)):
+        if n < 1:
+            continue
+        try:
+            tuning.check_fused_vmem_budget(n, dtype, compute_uv=compute_uv)
+        except ValueError:
+            break                      # ascending ns: larger n only worse
+        fused_s = measure_fn(n, True) / batch
+        staged_s = measure_fn(n, False) / batch
+        points.append((n, float(fused_s), float(staged_s)))
+        if fused_s < staged_s:
+            fused_n_max = n
+    predicted = model_mod.predicted_crossover(bw, dtype=dtype, batch=batch,
+                                              profile=prof,
+                                              compute_uv=compute_uv)
+    return FusedCrossoverResult(bw=bw, dtype=dname, compute_uv=compute_uv,
+                                device_kind=model_mod.device_kind(),
+                                points=points, fused_n_max=fused_n_max,
+                                predicted_n_max=predicted)

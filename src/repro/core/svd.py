@@ -45,9 +45,37 @@ from repro.core import stage1 as s1
 from repro.core import bidiag_svd as s3
 from repro.core import transforms
 from repro.core import tuning
+from repro.kernels import ops
 
 __all__ = ["singular_values", "banded_singular_values", "bidiagonal_of",
            "batched_singular_values", "svd_batched", "svd", "banded_svd"]
+
+
+def _fused_path(a: jax.Array, cfg: tuning.PipelineConfig, *,
+                compute_uv: bool):
+    """DESIGN.md §13: the one-dispatch fused small-n tier.
+
+    Any entry point whose resolved config says ``backend="fused_small"``
+    lands here instead of the staged pipeline.  Banded inputs need no
+    separate path — the in-kernel stage-1 reflectors are exact no-ops on
+    already-zero tails.  Values mode is one dispatch end to end; uv mode is
+    two (the fused reduction, then one batched ``bidiag_svd`` composing the
+    vectors from the kernel's accumulated transforms).
+    """
+    lead = a.shape[:-2]
+    n = a.shape[-1]
+    mats = a.reshape((-1,) + a.shape[-2:])
+    if not compute_uv:
+        sig = ops.fused_svd(mats, bw=cfg.bw, compute_uv=False, config=cfg)
+        return sig.reshape(lead + (n,))
+    d, e, u2, vt2 = ops.fused_svd(mats, bw=cfg.bw, compute_uv=True,
+                                  config=cfg)
+    ub, sig, vtb = s3.bidiag_svd(d, e)
+    # A = U2 B V2^T and B = Ub S Vb^T  =>  U = U2 Ub, V^T = Vb^T V2^T.
+    u = jnp.matmul(u2, ub)
+    vt = jnp.matmul(vtb, vt2)
+    return (u.reshape(lead + (n, n)), sig.reshape(lead + (n,)),
+            vt.reshape(lead + (n, n)))
 
 
 def bidiagonal_of(a: jax.Array, *, bw: int | None = None,
@@ -65,7 +93,11 @@ def banded_singular_values(a: jax.Array, *, bw: int | None = None,
                            config: tuning.PipelineConfig | None = None
                            ) -> jax.Array:
     """Singular values of upper-banded (..., n, n) (stages 2+3), descending."""
-    d, e = bidiagonal_of(a, bw=bw, tw=tw, backend=backend, config=config)
+    cfg = tuning.PipelineConfig.of(config, bw=bw, tw=tw, backend=backend,
+                                   dtype=a.dtype, n=a.shape[-1])
+    if cfg.backend == "fused_small":
+        return _fused_path(a, cfg, compute_uv=False)
+    d, e = bidiagonal_of(a, config=cfg)
     return s3.bidiag_singular_values(d, e)
 
 
@@ -89,6 +121,8 @@ def singular_values(a: jax.Array, *, bw: int | None = None,
     """
     cfg = tuning.PipelineConfig.of(config, bw=bw, tw=tw, backend=backend,
                                    dtype=a.dtype, n=a.shape[-1])
+    if cfg.backend == "fused_small":
+        return _fused_path(a, cfg, compute_uv=False)
     return _three_stage(a, config=cfg)
 
 
@@ -173,6 +207,8 @@ def svd(a: jax.Array, *, bw: int | None = None, tw: int | None = None,
     """
     cfg = tuning.PipelineConfig.of(config, bw=bw, tw=tw, backend=backend,
                                    dtype=a.dtype, n=a.shape[-1])
+    if cfg.backend == "fused_small":
+        return _fused_path(a, cfg, compute_uv=compute_uv)
     if not compute_uv:
         return _three_stage(a, config=cfg)
     return _uv_pipeline(a, config=cfg, banded=False)
@@ -185,6 +221,8 @@ def banded_svd(a: jax.Array, *, bw: int | None = None, tw: int | None = None,
     """Full SVD of upper-banded (..., n, n) (stages 2+3 only)."""
     cfg = tuning.PipelineConfig.of(config, bw=bw, tw=tw, backend=backend,
                                    dtype=a.dtype, n=a.shape[-1])
+    if cfg.backend == "fused_small":
+        return _fused_path(a, cfg, compute_uv=compute_uv)
     if not compute_uv:
         return banded_singular_values(a, config=cfg)
     return _uv_pipeline(a, config=cfg, banded=True)

@@ -30,6 +30,8 @@ __all__ = [
     "default_tilewidth", "rows_per_step", "sweep_separation",
     "max_concurrent_sweeps", "occupancy_matrix_size",
     "vmem_working_set_bytes", "default_fuse_depth", "check_vmem_budget",
+    "fused_working_set_bytes", "check_fused_vmem_budget",
+    "DEFAULT_FUSED_CROSSOVER",
     "stage_plan", "default_bucket_batch", "ChaseConfig", "PipelineConfig",
 ]
 
@@ -198,6 +200,50 @@ def check_vmem_budget(b_in: int, tw: int, dtype=jnp.float32, *,
     return need
 
 
+# Default fused-vs-staged crossover (DESIGN.md §13): the ROADMAP names
+# n <= 256 as the launch-bound serve regime; the autotuner's measured
+# crossover (autotune.search.search_fused_crossover, persisted per
+# device/dtype) replaces this when available.
+DEFAULT_FUSED_CROSSOVER = 256
+
+
+def fused_working_set_bytes(n: int, dtype=jnp.float32, *,
+                            compute_uv: bool = False) -> int:
+    """VMEM bytes one fused_small grid step keeps resident (DESIGN.md §13).
+
+    The whole (n, n) matrix lives in VMEM for the kernel's lifetime; the
+    reflector scratch is a handful of (n,) vectors plus the (m = 2n-1)
+    bisection state; ``compute_uv`` adds the two (n, n) transform
+    accumulators.  Pallas double-buffers the block pipeline, hence the
+    factor 2 on the streamed operands.
+    """
+    s = _bytes(dtype)
+    mats = (3 if compute_uv else 1) * n * n
+    scratch = 12 * n
+    return 2 * mats * s + scratch * s
+
+
+def check_fused_vmem_budget(n: int, dtype=jnp.float32, *,
+                            compute_uv: bool = False,
+                            budget_bytes: int | None = None) -> int:
+    """Raise when one matrix cannot be VMEM-resident for the fused kernel.
+
+    The fused tier has no fallback tiling — its whole point is the matrix
+    never leaving fast memory — so an oversized n must be rejected up front
+    (the engines then keep such buckets on the staged path).  Returns the
+    working-set bytes on success.
+    """
+    budget = VMEM_BUDGET_BYTES if budget_bytes is None else budget_bytes
+    need = fused_working_set_bytes(n, dtype, compute_uv=compute_uv)
+    if need > budget:
+        raise ValueError(
+            f"fused_small working set for n={n}, "
+            f"dtype={jnp.dtype(dtype).name} (compute_uv={compute_uv}) "
+            f"needs {need} B of fast memory but the budget is {budget} B; "
+            f"route this bucket to the staged pipeline instead")
+    return need
+
+
 def stage_plan(bw: int, tw: int) -> tuple[tuple[int, int], ...]:
     """Tile-width schedule: ((b_in, tw_i), ...) reducing bw -> 1, <= tw/stage."""
     plan = []
@@ -342,6 +388,10 @@ class PipelineConfig:
         tw = tw if tw is not None else default_tilewidth(bw, dtype)
         tw = max(1, min(tw, max(bw - 1, 1)))
         check_vmem_budget(bw, tw, dtype, tape=compute_uv)
+        if backend == "fused_small" and n is not None:
+            # the fused tier keeps the whole matrix VMEM-resident: infeasible
+            # n must fail here, not silently spill inside the kernel
+            check_fused_vmem_budget(n, dtype, compute_uv=compute_uv)
         if max_batch is None:
             max_batch = default_bucket_batch(n, bw) if n else 8
         if fuse is None:

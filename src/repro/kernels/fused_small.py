@@ -1,0 +1,293 @@
+"""One-dispatch fused small-n SVD kernel (DESIGN.md §13).
+
+For the serve tier's dominant workload — thousands of small matrices per
+step — the staged pipeline pays one kernel dispatch per chase super-step,
+so launch overhead, not bandwidth, bounds latency.  Following the batched
+small-size design point (Abdelfattah & Fasi, PAPERS.md: one thread block
+per matrix, whole problem resident on chip), this module runs the ENTIRE
+per-matrix reduction inside a single ``pallas_call`` over a ``(B,)`` grid:
+
+* phase 1 — dense -> upper-banded(bw): per-column left reflector (zero the
+  subdiagonal tail) + right reflector pivoted at ``j + bw`` (truncate the
+  row to bw superdiagonals).  Already-banded inputs cost nothing extra:
+  zero tails give ``tau = 0`` reflectors, exact no-ops (householder.py).
+* phase 2 — band -> bidiagonal: ONE SBR stage with ``b_in = bw``,
+  ``tw = bw - 1`` (b_out = 1), the same sweep/pivot walk as the numpy
+  oracle ``core.reference.reduce_stage_dense_ref`` — every bulge-chase
+  cycle runs in-kernel, no per-cycle dispatch, no host round-trips.
+* phase 3 — singular values: the Golub–Kahan Sturm-count bisection of
+  ``core.bidiag_svd.bidiag_singular_values`` inlined and vectorized over
+  all n values at once (identical per-element arithmetic).
+
+The (n, n) working set plus an (n,) scratch vector — and for
+``compute_uv=True`` the two (n, n) accumulators — stay VMEM-resident for
+the kernel's lifetime (budget math: ``core.tuning.fused_working_set_bytes``).
+``compute_uv=True`` returns ``(d, e, U2, V2^T)`` instead: the bidiagonal
+plus the accumulated two-sided transforms; the caller composes the final
+vectors with one batched ``bidiag_svd`` call (two dispatches total — the
+values path, the B-heavy serve workload, is the one-dispatch tier).
+
+Reflectors use a *masked* variant of ``core.householder.make_reflector``:
+full-length (n,) vectors with support ``[lo, hi]`` selected by iota masks,
+so every loop iteration has static shapes (fori-able, Mosaic-friendly) and
+inactive cycles (pivot past the edge) degenerate to exact no-ops through
+the same ``tau = 0`` path that handles zero tails.
+
+CPU CI runs this kernel under ``interpret=True`` (small n only — interpret
+mode evaluates the bisection's fori steps eagerly); the production CPU path
+is the jitted twin ``kernels.ref.fused_small_svd_ref`` which vmaps the same
+`_reduce_single` body and delegates phase 3 to ``bidiag_singular_values``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fused_small_svd_pallas"]
+
+
+# ---------------------------------------------------------------------------
+# masked reflector + structural fixes (static shapes, iota masks)
+# ---------------------------------------------------------------------------
+
+def _masked_reflector(x, lo, hi, idx):
+    """(v, tau, beta) for the reflector over ``x[lo:hi+1]`` (pivot ``lo``),
+    returned as a full-length masked vector: ``v[lo] = 1``, support-only
+    tail, zeros elsewhere.  Empty / out-of-range / zero-tail supports give
+    ``tau = 0`` — same formulas and guards as ``householder.make_reflector``.
+    """
+    dt = x.dtype
+    acc = jnp.float32 if dt in (jnp.bfloat16, jnp.float16) else dt
+    xa = x.astype(acc)
+    tail = (idx > lo) & (idx <= hi)
+    alpha = jnp.sum(jnp.where(idx == lo, xa, 0))
+    x2 = jnp.where(tail, xa, 0)
+    sigma = jnp.sum(x2 * x2)
+    mu = jnp.sqrt(alpha * alpha + sigma)
+    beta = jnp.where(alpha >= 0, -mu, mu)
+    safe = sigma > 0
+    denom = jnp.where(safe, alpha - beta, 1.0)
+    tau = jnp.where(safe, (beta - alpha) / beta, 0.0)
+    v = jnp.where(safe, x2 / denom, 0.0) + jnp.where(idx == lo, 1.0, 0.0)
+    beta_out = jnp.where(safe, beta, alpha)
+    return v.astype(dt), tau.astype(dt), beta_out.astype(dt)
+
+
+def _fix_row(a, rows2, cols2, r, lo, hi, beta, tau):
+    """Post-right-reflector structural fix: row ``r`` gets exact zeros on
+    ``(lo, hi]`` and ``beta`` at ``lo`` — gated on ``tau != 0`` exactly like
+    the numpy oracle's ``if tau != 0.0`` branch."""
+    inrow = rows2 == r
+    fixed = jnp.where(inrow & (cols2 > lo) & (cols2 <= hi),
+                      jnp.zeros_like(a), a)
+    fixed = jnp.where(inrow & (cols2 == lo), beta, fixed)
+    return jnp.where(tau != 0, fixed, a)
+
+
+def _fix_col(a, rows2, cols2, c, lo, hi, beta, tau):
+    incol = cols2 == c
+    fixed = jnp.where(incol & (rows2 > lo) & (rows2 <= hi),
+                      jnp.zeros_like(a), a)
+    fixed = jnp.where(incol & (rows2 == lo), beta, fixed)
+    return jnp.where(tau != 0, fixed, a)
+
+
+# ---------------------------------------------------------------------------
+# single-matrix whole-pipeline body (shared by the pallas kernel and the
+# kernels/ref.py CPU twin)
+# ---------------------------------------------------------------------------
+
+def _reduce_single(a, *, bw, compute_uv):
+    """Phases 1+2 on one (n, n) matrix: returns ``(a, u, v, d, e)`` with
+    ``a`` bidiagonal, ``u^T a_in v`` bidiagonal when ``compute_uv`` (else
+    ``u``/``v`` are (1, 1) dummies), and (d, e) in the e[0]-unused
+    convention of ``bidiag_singular_values``."""
+    n = a.shape[0]
+    dt = a.dtype
+    rows2 = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    cols2 = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    idx = cols2[0]
+    zero = jnp.zeros_like(a)
+    if compute_uv:
+        u = (rows2 == cols2).astype(dt)
+        v = (rows2 == cols2).astype(dt)
+    else:
+        u = v = jnp.zeros((1, 1), dt)
+
+    def right(carry, r, lo, hi):
+        a, u, v = carry
+        row = jnp.sum(jnp.where(rows2 == r, a, zero), axis=0)
+        vec, tau, beta = _masked_reflector(row, lo, hi, idx)
+        a = a - tau * jnp.outer(a @ vec, vec)
+        a = _fix_row(a, rows2, cols2, r, lo, hi, beta, tau)
+        if compute_uv:
+            v = v - tau * jnp.outer(v @ vec, vec)
+        return a, u, v
+
+    def left(carry, lo, hi):
+        a, u, v = carry
+        col = jnp.sum(jnp.where(cols2 == lo, a, zero), axis=1)
+        vec, tau, beta = _masked_reflector(col, lo, hi, idx)
+        a = a - tau * jnp.outer(vec, vec @ a)
+        a = _fix_col(a, rows2, cols2, lo, lo, hi, beta, tau)
+        if compute_uv:
+            u = u - tau * jnp.outer(u @ vec, vec)
+        return a, u, v
+
+    # phase 1: dense -> upper-banded(bw).  Banded inputs: all tau = 0.
+    def p1(j, carry):
+        carry = left(carry, j, n - 1)          # zero a[j+1:, j]
+        return right(carry, j, j + bw, n - 1)  # zero a[j, j+bw+1:]
+
+    carry = jax.lax.fori_loop(0, max(n - 1, 0), p1, (a, u, v))
+
+    # phase 2: one SBR stage b_in = bw, tw = bw - 1 (b_out = 1) — the
+    # sweep/pivot walk of reference.reduce_stage_dense_ref, every cycle
+    # in-kernel.  bw == 1 means phase 1 already left a bidiagonal.
+    if bw >= 2 and n >= 3:
+        ncyc = (n - 2) // bw + 1
+
+        def cyc(R, jc, carry):
+            p = R + 1 + jc * bw
+            r = jnp.where(jc == 0, R, p - bw)
+            hi = jnp.minimum(p + bw - 1, n - 1)
+            carry = right(carry, r, p, hi)     # chase the bulge row
+            return left(carry, p, hi)          # re-zero the bulge column
+
+        def sweep(R, carry):
+            return jax.lax.fori_loop(
+                0, ncyc, lambda jc, c: cyc(R, jc, c), carry)
+
+        carry = jax.lax.fori_loop(0, n - 2, sweep, carry)
+
+    a, u, v = carry
+    d = jnp.sum(jnp.where(rows2 == cols2, a, zero), axis=1)
+    e = jnp.sum(jnp.where(cols2 == rows2 + 1, a, zero), axis=0)
+    return a, u, v, d, e
+
+
+def _sigma_from_bidiag(d, e, *, max_iter=0):
+    """In-kernel phase 3: ``bidiag_singular_values`` arithmetic, vectorized
+    over all n shift searches at once instead of vmapped (identical
+    per-element float ops: same z, same bound, same Sturm recurrence and
+    guards, same iteration count)."""
+    n = d.shape[0]
+    dt = d.dtype
+    if n == 1:
+        return jnp.abs(d)
+    acc = jnp.float32 if dt in (jnp.bfloat16, jnp.float16) else dt
+    m = 2 * n - 1
+    im = jax.lax.broadcasted_iota(jnp.int32, (m, n), 0)
+    jn = jax.lax.broadcasted_iota(jnp.int32, (m, n), 1)
+    # z = (d_1, e_1, d_2, ..., e_{n-1}, d_n): gk_offdiag via one-hot masks.
+    da = d.astype(acc)
+    ea = e.astype(acc)
+    z = (jnp.sum(jnp.where(im == 2 * jn, da[None, :], 0), axis=1)
+         + jnp.sum(jnp.where(im == 2 * jn - 1, ea[None, :], 0), axis=1))
+    az = jnp.abs(z)
+    # Gershgorin bound == max(pad[:-1] + pad[1:]) + 1 with zero end-padding.
+    bound = jnp.maximum(jnp.max(az[:-1] + az[1:]),
+                        jnp.maximum(az[0], az[-1])) + jnp.asarray(1, acc)
+    if max_iter == 0:
+        max_iter = 60 if acc == jnp.float64 else 40
+    tiny = jnp.asarray(jnp.finfo(acc).tiny * 4, acc)
+    idxm = im[:, 0]
+    ks = jn[0] + 1                                 # 1-indexed ascending
+
+    def sturm_vec(lam):                            # lam: (n,) shifts
+        def body(k, carry):
+            t, cnt = carry
+            t = jnp.where(jnp.abs(t) < tiny,
+                          jnp.where(t < 0, -tiny, tiny), t)
+            zk = jnp.sum(jnp.where(idxm == k - 1, z, 0))
+            t_next = -lam - (zk * zk) / t
+            return t_next, cnt + (t_next < 0)
+
+        t0 = -lam
+        _, cnt = jax.lax.fori_loop(1, m + 1, body,
+                                   (t0, (t0 < 0).astype(jnp.int32)))
+        return cnt
+
+    def bis(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        ok = (sturm_vec(mid) - n) >= ks
+        return jnp.where(ok, lo, mid), jnp.where(ok, mid, hi)
+
+    lo, hi = jax.lax.fori_loop(0, max_iter, bis,
+                               (jnp.zeros((n,), acc),
+                                jnp.zeros((n,), acc) + bound))
+    sig = 0.5 * (lo + hi)
+    rev = (jn[0][:, None] + jn[0][None, :]) == (n - 1)
+    return jnp.sum(jnp.where(rev, sig[None, :], 0), axis=1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# pallas kernel: grid (B,), one matrix per grid step, VMEM-resident
+# ---------------------------------------------------------------------------
+
+def _values_kernel(a_ref, sig_ref, *, bw, max_iter):
+    a = a_ref[0]
+    _, _, _, d, e = _reduce_single(a, bw=bw, compute_uv=False)
+    sig_ref[0] = _sigma_from_bidiag(d, e, max_iter=max_iter)
+
+
+def _uv_kernel(a_ref, d_ref, e_ref, u_ref, vt_ref, *, bw):
+    a = a_ref[0]
+    _, u, v, d, e = _reduce_single(a, bw=bw, compute_uv=True)
+    d_ref[0] = d
+    e_ref[0] = e
+    u_ref[0] = u
+    vt_ref[0] = v.T
+
+
+def effective_bw(n: int, bw: int) -> int:
+    """Clamp a requested bandwidth to the fused kernel's valid range
+    (bw = 0 requests mean "pick for me" and become 1; bw beyond n - 1 is
+    structurally meaningless for an n x n matrix)."""
+    return int(max(1, min(int(bw), max(int(n) - 1, 1))))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bw", "compute_uv", "interpret",
+                                    "max_iter"))
+def fused_small_svd_pallas(mats, *, bw, compute_uv=False, interpret=False,
+                           max_iter=0):
+    """Whole-pipeline SVD of a (B, n, n) stack, one grid step per matrix.
+
+    Values mode returns sigma (B, n) descending — ONE dispatch end to end.
+    ``compute_uv=True`` returns ``(d, e, u2, vt2)``; compose vectors with
+    one batched ``bidiag_svd`` (see ``core.svd``).
+    """
+    mats = jnp.asarray(mats)
+    assert mats.ndim == 3 and mats.shape[-1] == mats.shape[-2], mats.shape
+    b, n, _ = mats.shape
+    bw_eff = effective_bw(n, bw)
+    in_specs = [pl.BlockSpec((1, n, n), lambda i: (i, 0, 0))]
+    if compute_uv:
+        kern = functools.partial(_uv_kernel, bw=bw_eff)
+        out_shape = (jax.ShapeDtypeStruct((b, n), mats.dtype),
+                     jax.ShapeDtypeStruct((b, n), mats.dtype),
+                     jax.ShapeDtypeStruct((b, n, n), mats.dtype),
+                     jax.ShapeDtypeStruct((b, n, n), mats.dtype))
+        out_specs = (pl.BlockSpec((1, n), lambda i: (i, 0)),
+                     pl.BlockSpec((1, n), lambda i: (i, 0)),
+                     pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+                     pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)))
+    else:
+        kern = functools.partial(_values_kernel, bw=bw_eff,
+                                 max_iter=max_iter)
+        out_shape = jax.ShapeDtypeStruct((b, n), mats.dtype)
+        out_specs = pl.BlockSpec((1, n), lambda i: (i, 0))
+    return pl.pallas_call(
+        kern,
+        out_shape=out_shape,
+        grid=(b,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        interpret=interpret,
+    )(mats)

@@ -25,7 +25,8 @@ import jax
 from repro.kernels import ref as _ref
 
 __all__ = ["chase_cycle", "hh_block_apply", "tape_apply", "flash_attention",
-           "register_backend", "resolve_backend", "backend_names"]
+           "fused_svd", "register_backend", "resolve_backend",
+           "backend_names"]
 
 
 def _platform() -> str:
@@ -109,6 +110,8 @@ register_backend(
         _ref.tape_apply_ref(v, t, c),
     flash_attention=lambda q, k, v, *, block_q, block_k, interpret:
         _ref.flash_attention_ref(q, k, v),
+    fused_svd=lambda mats, *, bw, compute_uv, interpret:
+        _ref.fused_small_svd_ref(mats, bw=bw, compute_uv=compute_uv),
 )
 
 
@@ -145,8 +148,40 @@ def _pallas_flash(q, k, v, *, block_q, block_k, interpret):
                                      interpret=interpret)
 
 
+def _pallas_fused(mats, *, bw, compute_uv, interpret):
+    from repro.kernels import fused_small
+    return fused_small.fused_small_svd_pallas(mats, bw=bw,
+                                              compute_uv=compute_uv,
+                                              interpret=interpret)
+
+
 register_backend("pallas", chase_cycle=_pallas_chase, hh_block_apply=_pallas_hh,
-                 tape_apply=_pallas_tape, flash_attention=_pallas_flash)
+                 tape_apply=_pallas_tape, flash_attention=_pallas_flash,
+                 fused_svd=_pallas_fused)
+
+
+# ---- "fused_small" (DESIGN.md §13): the one-dispatch small-n SVD tier ------
+#
+# A complete backend, not just an op: ``PipelineConfig(backend="fused_small")``
+# is valid anywhere a backend name goes (including inside shard_map's local
+# function, so PR 5's sharded dispatch serves a whole shard bucket as one
+# kernel launch).  ``fused_svd`` is platform-routed — the Pallas kernel where
+# Pallas compiles (TPU), the jitted jnp twin elsewhere (one XLA dispatch on
+# CPU; interpret-mode Pallas would eagerly step ~1e4 fori iterations per
+# matrix).  The staged ops delegate to the platform default so a
+# fused_small-configured pipeline can still run any staged stage it needs.
+
+def _fused_small_delegate(op: str) -> Callable:
+    def impl(*args, **kwargs):
+        base = "pallas" if _platform() == "tpu" else "ref"
+        return _impl(op, base)(*args, **kwargs)
+    return impl
+
+
+register_backend("fused_small",
+                 **{op: _fused_small_delegate(op)
+                    for op in ("chase_cycle", "hh_block_apply", "tape_apply",
+                               "flash_attention", "fused_svd")})
 
 
 # ---------------------------------------------------------------------------
@@ -212,6 +247,25 @@ def hh_block_apply(v: jax.Array, t: jax.Array, c: jax.Array, *,
     backend, interpret = _resolve(backend, interpret, config)
     return _impl("hh_block_apply", backend)(v, t, c, block_cols=block_cols,
                                             interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bw", "compute_uv", "backend",
+                                             "interpret", "config"))
+def fused_svd(mats: jax.Array, *, bw: int, compute_uv: bool = False,
+              backend: str = "auto", interpret: bool | None = None,
+              config=None):
+    """Whole-pipeline small-n SVD, one dispatch per (B, n, n) stack.
+
+    Values mode (default) returns sigma (B, n) descending.
+    ``compute_uv=True`` returns ``(d, e, u2, vt2)`` — the bidiagonal plus
+    the accumulated two-sided transforms; ``core.svd`` composes the final
+    vectors with one batched ``bidiag_svd``.  ``backend="auto"`` follows the
+    platform default; ``"fused_small"`` platform-routes (Pallas kernel on
+    TPU, jitted jnp twin elsewhere).
+    """
+    backend, interpret = _resolve(backend, interpret, config)
+    return _impl("fused_svd", backend)(mats, bw=bw, compute_uv=compute_uv,
+                                       interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "interpret",

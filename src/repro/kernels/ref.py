@@ -24,7 +24,8 @@ import jax.numpy as jnp
 from repro.core.householder import make_reflector
 
 __all__ = ["chase_window_ref", "chase_cycle_ref", "chase_superstep_ref",
-           "hh_block_apply_ref", "tape_apply_ref", "flash_attention_ref"]
+           "hh_block_apply_ref", "tape_apply_ref", "flash_attention_ref",
+           "fused_small_svd_ref"]
 
 
 def _chase_window(window: jax.Array, is_first: jax.Array, *, b_in: int,
@@ -217,3 +218,32 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
     scores = jnp.where(mask[None], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bst,btd->bsd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def fused_small_svd_ref(mats, *, bw: int, compute_uv: bool = False,
+                        max_iter: int = 0):
+    """CPU/interpret twin of ``fused_small.fused_small_svd_pallas``.
+
+    vmaps the SAME single-matrix whole-pipeline body (`_reduce_single`,
+    phases 1+2) over the batch but delegates phase 3 to the existing
+    vmapped ``core.bidiag_svd.bidiag_singular_values`` — on CPU one jitted
+    XLA computation replaces the kernel's grid, which is exactly the fused
+    tier's point (one dispatch per bucket, no per-cycle launches).  Values
+    mode returns sigma (B, n) descending; ``compute_uv=True`` returns
+    ``(d, e, u2, vt2)`` like the pallas kernel.
+    """
+    import functools
+
+    from repro.core import bidiag_svd as _s3
+    from repro.kernels import fused_small as _fs
+
+    mats = jnp.asarray(mats)
+    assert mats.ndim == 3 and mats.shape[-1] == mats.shape[-2], mats.shape
+    n = mats.shape[-1]
+    bw_eff = _fs.effective_bw(n, bw)
+    red = jax.vmap(functools.partial(_fs._reduce_single, bw=bw_eff,
+                                     compute_uv=compute_uv))
+    _, u, v, d, e = red(mats)
+    if compute_uv:
+        return d, e, u, jnp.swapaxes(v, -1, -2)
+    return _s3.bidiag_singular_values(d, e, max_iter=max_iter)

@@ -76,10 +76,11 @@ class AsyncSVDEngine(SVDEngine):
                  autotune_cache: str | None = None, mesh=None,
                  batch_window_s: float = 0.01,
                  default_timeout_s: float | None = None,
-                 max_pending: int = 4096, finished_history: int = 1024):
+                 max_pending: int = 4096, finished_history: int = 1024,
+                 fused_n_max: int | None = None):
         super().__init__(config, backend=backend, max_batch=max_batch,
                          autotune=autotune, autotune_cache=autotune_cache,
-                         mesh=mesh)
+                         mesh=mesh, fused_n_max=fused_n_max)
         self.finished = collections.deque(maxlen=int(finished_history))
         self.batch_window_s = float(batch_window_s)
         self.default_timeout_s = default_timeout_s

@@ -221,11 +221,22 @@ class SVDEngine:
     all local devices (DESIGN.md §12).  ``metrics`` (a
     :class:`~repro.serve.metrics.ServeMetrics`) counts queue depth,
     batch-fill ratio, and bucket hit-rate.
+
+    ``fused_n_max`` governs the one-dispatch fused small-n tier
+    (DESIGN.md §13): buckets with ``n <= fused_n_max`` resolve with
+    ``backend="fused_small"`` — the whole per-matrix pipeline as a single
+    kernel dispatch — and everything larger stays on the staged pipeline.
+    ``None`` (the default) uses the tuned crossover from the cache when
+    ``autotune=True``, else ``tuning.DEFAULT_FUSED_CROSSOVER``; ``0``
+    disables the tier; an int pins it.  Per-bucket routing is visible in
+    ``metrics.snapshot()["bucket_tiers"]`` and the dispatch counters in
+    ``["tiers"]`` — the serve smoke gate asserts on both.
     """
 
     def __init__(self, config=None, *, backend: str = "auto",
                  max_batch: int | None = None, autotune: bool = False,
-                 autotune_cache: str | None = None, mesh=None):
+                 autotune_cache: str | None = None, mesh=None,
+                 fused_n_max: int | None = None):
         from repro.core import tuning
         if config is None:
             config = tuning.PipelineConfig.resolve(backend=backend)
@@ -234,6 +245,7 @@ class SVDEngine:
         self.config = config
         self.autotune = autotune
         self.autotune_cache = autotune_cache
+        self.fused_n_max = fused_n_max           # fused-tier crossover, §13
         self.mesh = mesh                         # multi-device dispatch, §12
         self.buckets: dict[tuple, list[SVDRequest]] = {}
         self.finished: list[SVDRequest] = []
@@ -252,6 +264,31 @@ class SVDEngine:
 
     def pending(self) -> int:
         return sum(len(v) for v in self.buckets.values())
+
+    def _fused_n_max_for(self, key: tuple) -> int:
+        """The fused-tier crossover governing this bucket (DESIGN.md §13).
+
+        Precedence: an explicit engine ``fused_n_max`` pins it (0 disables
+        the tier entirely); otherwise ``autotune=True`` consults the
+        MEASURED crossover persisted by ``python -m repro.autotune
+        --fused-crossover`` (bw-specific entry first, then the device-wide
+        one); otherwise the static default
+        ``tuning.DEFAULT_FUSED_CROSSOVER`` — the paper's small-n regime.
+        """
+        if self.fused_n_max is not None:
+            return int(self.fused_n_max)
+        _n, bw, dtype, _banded, compute_uv = key
+        if self.autotune:
+            from repro.autotune import cache as at_cache
+            from repro.autotune import model as at_model
+            tuned = at_cache.lookup_crossover(
+                device_kind=at_model.device_kind(),
+                dtype=np.dtype(dtype).name, compute_uv=compute_uv, bw=bw,
+                path=self.autotune_cache)
+            if tuned is not None:
+                return tuned
+        from repro.core import tuning
+        return tuning.DEFAULT_FUSED_CROSSOVER
 
     def _cfg_for(self, key: tuple):
         from repro.core import tuning
@@ -274,11 +311,7 @@ class SVDEngine:
             eff = min(self.config.max_batch,
                       entry.get("max_batch")
                       or tuning.default_bucket_batch(n, bw))
-            cfg = tuning.PipelineConfig.resolve(
-                bw=bw, tw=entry["tw"], backend=self.config.backend,
-                interpret=self.config.interpret, dtype=np.dtype(dtype), n=n,
-                max_batch=max(1, eff), unroll=self.config.unroll,
-                compute_uv=compute_uv, fuse=entry["fuse"])
+            tw, fuse = entry["tw"], entry["fuse"]
         else:
             # Cache miss (or autotune off): the engine's own resolved
             # config stays in charge — an explicitly-configured tw/fuse is
@@ -288,11 +321,29 @@ class SVDEngine:
             # chip) are not zero-padded 8x for nothing.
             eff = min(self.config.max_batch,
                       tuning.default_bucket_batch(n, bw))
-            cfg = tuning.PipelineConfig.resolve(
-                bw=bw, tw=self.config.tw, backend=self.config.backend,
+            tw, fuse = self.config.tw, self.config.fuse
+
+        def resolve(backend: str):
+            return tuning.PipelineConfig.resolve(
+                bw=bw, tw=tw, backend=backend,
                 interpret=self.config.interpret, dtype=np.dtype(dtype), n=n,
                 max_batch=max(1, eff), unroll=self.config.unroll,
-                compute_uv=compute_uv, fuse=self.config.fuse)
+                compute_uv=compute_uv, fuse=fuse)
+
+        cfg = None
+        if n <= self._fused_n_max_for(key):
+            # Fused small-n tier (DESIGN.md §13): the whole per-matrix
+            # pipeline as one dispatch.  A VMEM-infeasible n falls back to
+            # the staged pipeline instead of failing the bucket.
+            try:
+                cfg = resolve("fused_small")
+            except ValueError:
+                cfg = None
+        if cfg is None:
+            cfg = resolve(self.config.backend)
+        self.metrics.set_bucket_tier(
+            key, "fused" if cfg.backend == "fused_small" else "staged",
+            n=n, backend=cfg.backend)
         self._cfg_memo[key] = cfg
         return cfg
 
@@ -363,6 +414,10 @@ class SVDEngine:
         self.calls += 1
         self.metrics.add(batches=1, served_slots=len(mats),
                          padded_slots=cfg.max_batch - len(mats))
+        self.metrics.add_tier(
+            "fused" if cfg.backend == "fused_small" else "staged",
+            batches=1, served_slots=len(mats),
+            padded_slots=cfg.max_batch - len(mats))
         k = len(mats)
         sig = np.asarray(sig)[:k]
         if compute_uv:

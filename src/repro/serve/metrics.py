@@ -16,6 +16,16 @@ snapshot because every consumer wants them):
 * ``bucket_hit_rate``  — submits that landed in an already-resolved bucket
   key / total submits: the fraction of traffic that paid ZERO config
   resolution or jit compilation (each bucket key compiles exactly once).
+
+Backend attribution (DESIGN.md §13): dispatches are ALSO tallied per
+execution tier — ``"fused"`` (the one-dispatch fused_small backend) vs
+``"staged"`` (the three-stage pipeline) — via :meth:`add_tier`, and every
+bucket records which tier its resolved config routed it to
+(:meth:`set_bucket_tier`).  The snapshot exposes both: ``"tiers"`` holds
+per-tier batches/served_slots/padded_slots (+ fill ratio), and
+``"bucket_tiers"`` maps the bucket key to ``{"tier", "n", "backend"}`` —
+sliceable proof of WHERE each size class actually ran, which the serve
+smoke gate asserts on.
 """
 
 from __future__ import annotations
@@ -41,11 +51,16 @@ class ServeMetrics:
         "bucket_hits",        # submits into an already-seen bucket key
     )
 
+    # per-tier slice of the dispatch counters ("fused" vs "staged")
+    _TIER_COUNTERS = ("batches", "served_slots", "padded_slots")
+
     def __init__(self) -> None:
         self._lock = threading.Lock()
         for name in self._COUNTERS:
             setattr(self, name, 0)
         self.queue_depth = 0                  # gauge, set by the engine
+        self._tiers: dict[str, dict[str, int]] = {}
+        self._bucket_tiers: dict[str, dict] = {}
 
     def add(self, **deltas: int) -> None:
         """Atomically bump counters: ``metrics.add(submitted=1, ...)``."""
@@ -53,6 +68,28 @@ class ServeMetrics:
             for name, delta in deltas.items():
                 assert name in self._COUNTERS, name
                 setattr(self, name, getattr(self, name) + int(delta))
+
+    def add_tier(self, tier: str, **deltas: int) -> None:
+        """Bump the per-tier dispatch slice: ``add_tier("fused", batches=1,
+        served_slots=3, padded_slots=1)``.  Tiers are created on first use
+        so a fused-disabled engine reports no empty "fused" row."""
+        with self._lock:
+            row = self._tiers.setdefault(
+                tier, {name: 0 for name in self._TIER_COUNTERS})
+            for name, delta in deltas.items():
+                assert name in self._TIER_COUNTERS, name
+                row[name] += int(delta)
+
+    def set_bucket_tier(self, key, tier: str, *, n: int,
+                        backend: str) -> None:
+        """Record which tier a bucket's resolved config routed it to.
+
+        Keyed by ``str(key)`` (bucket keys are tuples; snapshots must stay
+        JSON-serializable).  Idempotent per bucket — the engine calls this
+        once at config-resolution time."""
+        with self._lock:
+            self._bucket_tiers[str(key)] = {"tier": tier, "n": int(n),
+                                            "backend": backend}
 
     def set_queue_depth(self, depth: int) -> None:
         with self._lock:
@@ -63,11 +100,19 @@ class ServeMetrics:
         with self._lock:
             snap = {name: getattr(self, name) for name in self._COUNTERS}
             snap["queue_depth"] = self.queue_depth
+            tiers = {t: dict(row) for t, row in self._tiers.items()}
+            snap["bucket_tiers"] = {k: dict(v)
+                                    for k, v in self._bucket_tiers.items()}
         slots = snap["served_slots"] + snap["padded_slots"]
         snap["batch_fill_ratio"] = (snap["served_slots"] / slots
                                     if slots else 0.0)
         snap["bucket_hit_rate"] = (snap["bucket_hits"] / snap["submitted"]
                                    if snap["submitted"] else 0.0)
+        for row in tiers.values():
+            tslots = row["served_slots"] + row["padded_slots"]
+            row["batch_fill_ratio"] = (row["served_slots"] / tslots
+                                       if tslots else 0.0)
+        snap["tiers"] = tiers
         return snap
 
     def __repr__(self) -> str:
