@@ -49,7 +49,7 @@ jax.config.update("jax_enable_x64", True)
 
 SUITES = ["accuracy", "hyperparams", "occupancy", "scaling", "precision",
           "kernels_bench", "fusion", "batched", "vectors", "fused_small",
-          "serve_load"]
+          "serve_load", "stage3"]
 
 
 def _supports_smoke(fn) -> bool:

@@ -133,7 +133,7 @@ def _engine_cfgs(eng, reqs):
 
 
 def throughput_compare(mix, count, *, backend="ref", seed=0, window_s=0.002,
-                       autotune_cache=None, fused_n_max=None):
+                       autotune_cache=None, fused_n_max=None, dc_n_min=None):
     """Serial vs micro-batched engine throughput on an identical workload.
 
     Returns ``(rows, result)`` — CSV rows plus a dict with the speedup and
@@ -154,7 +154,7 @@ def throughput_compare(mix, count, *, backend="ref", seed=0, window_s=0.002,
                          autotune=autotune_cache is not None,
                          autotune_cache=autotune_cache,
                          max_batch=32 if autotune_cache else None,
-                         fused_n_max=fused_n_max)
+                         fused_n_max=fused_n_max, dc_n_min=dc_n_min)
     cfgs = _engine_cfgs(eng, reqs_engine)
 
     # Warm every compiled program OUTSIDE the timed windows (bucket-capacity
@@ -224,7 +224,8 @@ def throughput_compare(mix, count, *, backend="ref", seed=0, window_s=0.002,
 
 
 def poisson_run(mix, count, rate, *, backend="ref", seed=0, window_s=0.005,
-                timeout_s=None, autotune_cache=None, fused_n_max=None):
+                timeout_s=None, autotune_cache=None, fused_n_max=None,
+                dc_n_min=None):
     """Open-loop Poisson arrivals at ``rate`` req/s; per-request latency.
 
     Returns ``(rows, result)``; ``result`` carries the latency percentiles,
@@ -242,7 +243,7 @@ def poisson_run(mix, count, rate, *, backend="ref", seed=0, window_s=0.005,
                          autotune=autotune_cache is not None,
                          autotune_cache=autotune_cache,
                          max_batch=32 if autotune_cache else None,
-                         fused_n_max=fused_n_max)
+                         fused_n_max=fused_n_max, dc_n_min=dc_n_min)
     # Warm every bucket's compile outside the timed run (never under the
     # engine's default deadline — compiles take seconds).
     [f.result() for f in [eng.submit(r, timeout_s=float("inf"))
@@ -307,6 +308,46 @@ def poisson_run(mix, count, rate, *, backend="ref", seed=0, window_s=0.005,
                 f"timed_out={result['timed_out']};"
                 f"fill={snap['batch_fill_ratio']:.2f}")]
     return rows, result
+
+
+def _dc_tier_smoke(*, backend="ref", seed=0):
+    """Stage-3 D&C routing check for the smoke gate (DESIGN.md §14).
+
+    The smoke mix is all small-n (fused-tier territory), so the D&C tier
+    would never fire there; this runs a tiny dedicated burst with the
+    fused tier off and the crossover pinned to 1 (``fused_n_max=0,
+    dc_n_min=1``) — every staged bucket MUST route "staged-dc", and the
+    served sigma must agree with ``numpy.linalg.svd`` to 1e-12 relative.
+    Returns a list of failure strings (empty = pass).
+    """
+    from repro.serve import SVDEngine, SVDRequest
+
+    rng = np.random.default_rng(seed + 11)
+    eng = SVDEngine(backend=backend, fused_n_max=0, dc_n_min=1)
+    mats = [rng.standard_normal((n, n)) for n in (24, 24, 48)]
+    for i, m in enumerate(mats):
+        eng.submit(SVDRequest(uid=i, matrix=m, bw=4))
+    done = {r.uid: r for r in eng.run()}
+    failures = []
+    snap = eng.metrics.snapshot()
+    for key, info in snap.get("bucket_tiers", {}).items():
+        if info["tier"] != "staged-dc":
+            failures.append(f"dc smoke: bucket {key} served on "
+                            f"{info['tier']!r}, expected 'staged-dc'")
+    if not snap.get("tiers", {}).get("staged-dc", {}).get("batches"):
+        failures.append("dc smoke: no staged-dc dispatches recorded")
+    for i, m in enumerate(mats):
+        r = done.get(i)
+        if r is None or r.error is not None:
+            failures.append(f"dc smoke: request {i} failed: "
+                            f"{r.error if r else 'missing'}")
+            continue
+        ref = np.linalg.svd(m, compute_uv=False)
+        err = float(np.abs(np.asarray(r.sigma) - ref).max() / ref.max())
+        if err > 1e-12:
+            failures.append(f"dc smoke: sigma disagrees with LAPACK by "
+                            f"{err:.2e} rel > 1e-12 (n={m.shape[0]})")
+    return failures
 
 
 def run(smoke: bool = False):
@@ -408,6 +449,11 @@ def main(argv=None) -> None:
         if not snap.get("tiers", {}).get("fused", {}).get("batches"):
             failures.append("no fused-tier dispatches recorded in the smoke "
                             "run (tiers metrics empty)")
+        # Stage-3 D&C routing (DESIGN.md §14): a dedicated tiny burst with
+        # the crossover pinned low, asserting the staged-dc tier fires AND
+        # its sigma agrees with LAPACK to 1e-12 — the CI assertion that the
+        # serve path actually exercises the D&C solver.
+        failures.extend(_dc_tier_smoke(seed=args.seed))
     if p99_budget and poi["latency_ms"]["p99"] > p99_budget:
         failures.append(f"p99 latency {poi['latency_ms']['p99']:.1f}ms "
                         f"> budget {p99_budget:g}ms")

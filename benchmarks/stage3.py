@@ -1,0 +1,169 @@
+"""Stage-3 bidiagonal solvers: Sturm bisection vs divide and conquer
+(DESIGN.md §14).
+
+Two measurements:
+
+* **Per-n crossover sweep** — the same random bidiagonal ``(B, n)`` stack
+  through ``core.bidiag_svd.bidiag_singular_values`` (the lockstep Sturm
+  bisection: a fixed ``max_iter`` of full m^2 count sweeps, m = 2n) and
+  ``core.bidiag_dc.bidiag_dc_singular_values`` (secular-equation merges
+  with deflation).  The derived column carries the speedup and the sigma
+  agreement; the smallest winning n is the measured crossover the
+  autotuner persists (``python -m repro.autotune --stage3-crossover``)
+  and ``stage3="auto"`` consumes.
+
+* **Full-SVD variant** — the same sweep through ``bidiag_svd`` vs
+  ``bidiag_dc_svd`` at a couple of sizes (both share the inverse-iteration
+  vector machinery, so this isolates what the sigma solver contributes to
+  the uv path).
+
+``--check`` (implied in smoke mode) asserts dc-vs-bisect sigma agreement
+<= 1e-12 relative at fp64 for every measured n and exits non-zero on
+violation — the benchmark cannot report a speedup from a wrong answer.
+
+  PYTHONPATH=src python -m benchmarks.run --only stage3 [--smoke]
+  PYTHONPATH=src python benchmarks/stage3.py [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+if __package__ in (None, ""):                 # direct script execution
+    _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _REPO)
+    sys.path.insert(0, os.path.join(_REPO, "src"))
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+
+SWEEP_NS = (512, 1024, 2048, 4096)
+SMOKE_NS = (128, 256)
+UV_NS = (512, 1024)
+SMOKE_UV_NS = (64,)
+BATCH = 4
+AGREE_TOL = 1e-12
+
+
+def _stack(n, batch, seed=0, dtype=np.float64):
+    """Random (d, e) stacks in the repo convention: e is (n,) with e[0]
+    unused (e[i] = B[i-1, i])."""
+    rng = np.random.default_rng(seed)
+    d = rng.standard_normal((batch, n)).astype(dtype)
+    e = rng.standard_normal((batch, n)).astype(dtype)
+    return d, e
+
+
+def sweep(ns, *, batch=BATCH, seed=0, check=False):
+    """Bisect vs dc per-matrix wall time (values path) over the n sweep."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import bidiag_dc as dc
+    from repro.core import bidiag_svd as bs
+
+    out, failures = [], []
+    dc_n_min = 1 + max(ns)
+    wins = []
+    for n in ns:
+        d, e = _stack(n, batch, seed)
+        d, e = jnp.asarray(d), jnp.asarray(e)
+        f_bi = jax.vmap(bs.bidiag_singular_values)
+        # dc batches (B, n) natively; vmap would turn its deflation-skip
+        # conds into both-branch selects and time a crippled solver.
+        f_dc = dc.bidiag_dc_singular_values
+        s_bi = jax.block_until_ready(f_bi(d, e))
+        s_dc = jax.block_until_ready(f_dc(d, e))
+        agree = float(jnp.max(jnp.abs(s_dc - s_bi)) / jnp.max(jnp.abs(s_bi)))
+        if check and agree > AGREE_TOL:
+            failures.append(f"n={n}: dc-vs-bisect sigma disagreement "
+                            f"{agree:.2e} rel > {AGREE_TOL:g}")
+        t_bi = timeit(lambda: f_bi(d, e))
+        t_dc = timeit(lambda: f_dc(d, e))
+        wins.append((n, t_dc < t_bi))
+        out.append(row(f"stage3/dc/n{n}/B{batch}", t_dc / batch * 1e6,
+                       f"speedup={t_bi / t_dc:.2f}x;agree={agree:.1e}"))
+        out.append(row(f"stage3/bisect/n{n}/B{batch}", t_bi / batch * 1e6,
+                       f"mats_per_s={batch / t_bi:.2f}"))
+    for n, won in reversed(wins):
+        if won:
+            dc_n_min = n
+        else:
+            break
+    out.append(row("stage3/crossover", 0.0, f"measured_dc_n_min={dc_n_min}"))
+    return out, failures
+
+
+def sweep_uv(ns, *, batch=2, seed=0, check=False):
+    """Bisect vs dc through the full-SVD stage-3 path (vectors included)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import bidiag_dc as dc
+    from repro.core import bidiag_svd as bs
+
+    out, failures = [], []
+    for n in ns:
+        d, e = _stack(n, batch, seed)
+        d, e = jnp.asarray(d), jnp.asarray(e)
+        f_bi = jax.vmap(bs.bidiag_svd)
+        f_dc = dc.bidiag_dc_svd         # native batching: see sweep()
+        s_bi = jax.block_until_ready(f_bi(d, e))[1]
+        s_dc = jax.block_until_ready(f_dc(d, e))[1]
+        agree = float(jnp.max(jnp.abs(s_dc - s_bi)) / jnp.max(jnp.abs(s_bi)))
+        if check and agree > AGREE_TOL:
+            failures.append(f"uv n={n}: dc-vs-bisect sigma disagreement "
+                            f"{agree:.2e} rel > {AGREE_TOL:g}")
+        t_bi = timeit(lambda: f_bi(d, e))
+        t_dc = timeit(lambda: f_dc(d, e))
+        out.append(row(f"stage3/dc_uv/n{n}/B{batch}", t_dc / batch * 1e6,
+                       f"speedup={t_bi / t_dc:.2f}x;agree={agree:.1e}"))
+        out.append(row(f"stage3/bisect_uv/n{n}/B{batch}", t_bi / batch * 1e6,
+                       f"mats_per_s={batch / t_bi:.2f}"))
+    return out, failures
+
+
+def run(smoke: bool = False):
+    """benchmarks.run suite entry: CSV rows; smoke mode also CHECKS sigma
+    agreement (raising on violation — the CI stage-3 gate rides here)."""
+    rows, failures = sweep(SMOKE_NS if smoke else SWEEP_NS, check=smoke)
+    urows, ufail = sweep_uv(SMOKE_UV_NS if smoke else UV_NS, check=smoke)
+    failures += ufail
+    if failures:
+        raise AssertionError("; ".join(failures))
+    return rows + urows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes, seconds-scale")
+    ap.add_argument("--check", action="store_true",
+                    help="assert dc-vs-bisect sigma agreement <= 1e-12 rel")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    import jax
+    jax.config.update("jax_enable_x64", True)
+
+    check = args.check or args.smoke
+    print("name,us_per_call,derived")
+    rows, failures = sweep(SMOKE_NS if args.smoke else SWEEP_NS,
+                           seed=args.seed, check=check)
+    urows, ufail = sweep_uv(SMOKE_UV_NS if args.smoke else UV_NS,
+                            seed=args.seed, check=check)
+    for line in rows + urows:
+        print(line, flush=True)
+    for f in failures + ufail:
+        print(f"# STAGE3 GATE FAIL: {f}", flush=True)
+    if failures + ufail:
+        sys.exit(1)
+    if check:
+        print("# stage3 gate OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -178,3 +178,38 @@ print(f"serve routing: n=24 bucket -> tier={tier['tier']!r} "
       f"{snap['tiers']['fused']['batches']}")
 assert tier["tier"] == "fused" and snap["tiers"]["fused"]["batches"] >= 1
 print("OK")
+
+# --- 9. divide-and-conquer stage 3: the large-n end (DESIGN.md §14) ----------
+# The Sturm bisection's critical path grows like n (every sweep is a
+# sequential depth-2n recurrence); Cuppen's D&C replaces it with log2(n/32)
+# secular merge levels whose deflated blocks are skipped at run time, so past
+# the measured crossover (~2048 on a CPU host, fp64) it wins outright —
+# stage3="auto" resolves the choice per problem through the autotune cache
+# (`python -m repro.autotune --stage3-crossover`).  This section times both
+# solvers on one n=4096 bidiagonal, so it takes ~a minute; everything above
+# runs in seconds.
+import time
+from repro.core.bidiag_dc import bidiag_dc_singular_values
+from repro.core.bidiag_svd import bidiag_singular_values
+
+n9 = 4096
+d9 = jnp.asarray(rng.standard_normal(n9))
+e9 = jnp.asarray(rng.standard_normal(n9))     # e[0] unused: e[i] = B[i-1,i]
+
+auto9 = PipelineConfig.resolve(bw=32, dtype=jnp.float64, stage3="auto")
+print(f"stage3='auto' resolves: n=256 -> {auto9.stage3_for(256)!r}, "
+      f"n={n9} -> {auto9.stage3_for(n9)!r}")
+
+sig_bi = jax.block_until_ready(bidiag_singular_values(d9, e9))   # + compile
+sig_dc = jax.block_until_ready(bidiag_dc_singular_values(d9, e9))
+t0 = time.perf_counter()
+jax.block_until_ready(bidiag_singular_values(d9, e9))
+t_bi = time.perf_counter() - t0
+t0 = time.perf_counter()
+jax.block_until_ready(bidiag_dc_singular_values(d9, e9))
+t_dc = time.perf_counter() - t0
+agree9 = float(jnp.max(jnp.abs(sig_dc - sig_bi)) / sig_bi[0])
+print(f"stage 3 at n={n9}: bisect {t_bi:.2f}s, dc {t_dc:.2f}s "
+      f"({t_bi / t_dc:.2f}x), sigma agreement {agree9:.1e}")
+assert agree9 < 1e-12
+print("OK")

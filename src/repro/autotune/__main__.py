@@ -71,9 +71,19 @@ def main(argv=None) -> int:
                     help="instead of the (tw, fuse, batch) grid, measure the "
                          "fused-vs-staged crossover per --shapes bw "
                          "(DESIGN.md §13) and persist fused_n_max")
+    ap.add_argument("--stage3-crossover", action="store_true",
+                    help="instead of the (tw, fuse, batch) grid, measure the "
+                         "stage-3 bisect-vs-dc crossover up to the largest "
+                         "--shapes n (DESIGN.md §14) and persist dc_n_min")
     args = ap.parse_args(argv)
 
     dtype = jnp.dtype(args.dtype)
+    if dtype.itemsize == 8:
+        # Without x64, float64 measurement arrays silently degrade to
+        # fp32 — timings for the wrong precision, and the crossover
+        # searches' sigma-agreement column reads ~1e-5 instead of ~1e-16.
+        import jax
+        jax.config.update("jax_enable_x64", True)
     backend, _ = ops.resolve_backend(args.backend)
     try:
         batches = tuple(sorted({int(b) for b in args.batches.split(",")
@@ -113,6 +123,24 @@ def main(argv=None) -> int:
                     compute_uv=args.compute_uv, bw=key_bw, path=path)
             print(f"# cached fused_n_max={res.fused_n_max} -> {dest}",
                   flush=True)
+        return 0
+
+    if args.stage3_crossover:
+        # One sweep, capped by the largest --shapes n; bw is irrelevant
+        # (stage 3 never sees the band).  The key is (device, dtype, uv).
+        n_cap = max(n for n, _ in parse_shapes(args.shapes))
+        ns = tuple(x for x in (256, 512, 1024, 2048, 4096, 8192)
+                   if x <= n_cap) or (n_cap,)
+        res = search_mod.search_stage3_crossover(
+            dtype=dtype, compute_uv=args.compute_uv, ns=ns,
+            batch=max(batches), profile=prof, warmup=args.warmup,
+            iters=args.iters)
+        print(res.table(), flush=True)
+        if not args.no_store:
+            dest = cache_mod.store_stage3(
+                res.to_entry(), device_kind=kind, dtype=dtype.name,
+                compute_uv=args.compute_uv, path=path)
+            print(f"# cached dc_n_min={res.dc_n_min} -> {dest}", flush=True)
         return 0
 
     for n, bw in parse_shapes(args.shapes):

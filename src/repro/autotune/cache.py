@@ -25,7 +25,7 @@ import time
 
 __all__ = ["ENV_VAR", "SCHEMA_VERSION", "cache_path", "make_key",
            "load", "lookup", "store", "crossover_key", "lookup_crossover",
-           "store_crossover"]
+           "store_crossover", "stage3_key", "lookup_stage3", "store_stage3"]
 
 ENV_VAR = "REPRO_AUTOTUNE_CACHE"
 SCHEMA_VERSION = 1
@@ -180,6 +180,63 @@ def store_crossover(entry: dict, *, device_kind: str, dtype: str,
     entry.setdefault("tuned_at_unix", int(time.time()))
     doc["entries"][crossover_key(device_kind=device_kind, dtype=dtype,
                                  compute_uv=compute_uv, bw=bw)] = entry
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(p) or ".",
+                               prefix=".cache-", suffix=".json.tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, p)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Stage-3 solver crossover entries (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+#
+# The bisect-vs-dc crossover for the bidiagonal solve is a property of
+# (device, dtype, uv) — stage 3 never sees the band, so there is no bw axis.
+# Same single-file entries dict, its own "stage3|..." prefix (collides with
+# neither make_key's "device=..." nor the "crossover|..." family).
+
+def stage3_key(*, device_kind: str, dtype: str, compute_uv: bool) -> str:
+    return (f"stage3|device={device_kind}|dtype={dtype}"
+            f"|uv={int(bool(compute_uv))}")
+
+
+def lookup_stage3(*, device_kind: str, dtype: str, compute_uv: bool,
+                  path: str | None = None) -> int | None:
+    """The measured D&C crossover ``dc_n_min`` (smallest n where the D&C
+    stage-3 solve beat bisection on this device), or None (use the static
+    ``core.bidiag_dc.DEFAULT_DC_N_MIN``).  A tuner that saw D&C lose at
+    every measured n stores a beyond-any-n sentinel, so "never" round-trips
+    as a valid (huge) threshold rather than a miss."""
+    entry = load(path)["entries"].get(stage3_key(
+        device_kind=device_kind, dtype=dtype, compute_uv=compute_uv))
+    if (isinstance(entry, dict) and isinstance(entry.get("dc_n_min"), int)
+            and entry["dc_n_min"] >= 1):
+        return entry["dc_n_min"]
+    return None
+
+
+def store_stage3(entry: dict, *, device_kind: str, dtype: str,
+                 compute_uv: bool, path: str | None = None) -> str:
+    """Merge one stage-3 crossover entry (``{"dc_n_min": int, ...}``) into
+    the cache, atomically, under the (device, dtype, uv) stage3 key."""
+    assert isinstance(entry.get("dc_n_min"), int), entry
+    p = cache_path(path)
+    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+    doc = load(p)
+    entry = dict(entry)
+    entry.setdefault("tuned_at_unix", int(time.time()))
+    doc["entries"][stage3_key(device_kind=device_kind, dtype=dtype,
+                              compute_uv=compute_uv)] = entry
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(p) or ".",
                                prefix=".cache-", suffix=".json.tmp")
     try:

@@ -46,6 +46,7 @@ __all__ = [
     "DeviceProfile", "PROFILES", "device_kind", "profile_for",
     "total_chase_cycles", "CostBreakdown", "stage_cost", "pipeline_cost",
     "fused_cost", "predicted_crossover", "FUSED_FAST_BW_RATIO",
+    "stage3_cost", "predicted_stage3_crossover", "DC_DEFLATION_FACTOR",
 ]
 
 
@@ -300,4 +301,131 @@ def predicted_crossover(bw: int, *, dtype=jnp.float32, batch: int = 8,
                                dtype=dtype, profile=prof, tape=compute_uv)
         if fc.seconds < staged:
             best = n
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Stage-3 solver tier (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+# Fraction of a merge's poles/roots that stay ACTIVE after deflation in a
+# typical D&C merge.  Deliberately coarse (real spectra deflate anywhere
+# from ~0 to ~99%); since the solver skips all-deflated blocks on BOTH the
+# root and the pole axis, the surviving quadratic work scales with the
+# SQUARE of this fraction, and the measured search
+# (``search.search_stage3_crossover``) overrides the prediction anyway.
+DC_DEFLATION_FACTOR = 0.35
+
+# Full-width secular passes per merge: the midpoint/anchor pass plus the
+# handful of adaptive exact-polish trips the early exit typically allows
+# (the windowed middle-way iterations in between are O(active * K), not
+# O(m^2), and ride in the level bookkeeping below).
+_DC_FULL_PASSES = 6.0
+
+# Streaming passes one D&C merge level makes over the padded problem
+# (sort, two stable partitions, Givens scan, window/heavy-pole gathers,
+# z-hat recompute, vector assembly) — the O(big) bookkeeping between
+# secular solves.
+_DC_LEVEL_PASSES = 64.0
+
+# Fixed word-equivalent cost per merge level, independent of problem size:
+# the latency-bound parts (sequential Givens scan steps, top_k, argsorts,
+# gather setup) do not stream at memory bandwidth, and at small n they, not
+# the quadratic secular work, are what keeps D&C behind bisection.  5e7
+# words ~ 2.5 ms on the cpu profile — calibrated so the predicted crossover
+# tracks the measured one (~2048 on the dev container, fp64).
+_DC_LEVEL_FLOOR_WORDS = 5.0e7
+
+
+def stage3_cost(n: int, *, solver: str, dtype=jnp.float64, batch: int = 1,
+                profile: DeviceProfile | None = None, leaf_n: int = 32,
+                newton_iters: int = 30) -> CostBreakdown:
+    """Predicted wall seconds of ONE batched stage-3 bidiagonal solve.
+
+    Both solvers work on the Golub–Kahan tridiagonal of size ``m = 2n`` and
+    are single dispatches (one jit call); they differ only in arithmetic
+    volume, modeled as fast-memory streaming words:
+
+    * ``solver="bisect"``: the lockstep Sturm sweep — ``max_iter`` fixed
+      iterations, each scanning all m poles for all m roots
+      (``max_iter * m^2`` words; max_iter = 60 fp64 / 40 fp32, matching
+      ``core.bidiag_svd.default_bisect_iters``).
+    * ``solver="dc"``: leaves solved by the same bisection at size
+      ``lm ~ 2*leaf_n`` (``max_iter * lm * big`` words across all leaves),
+      then ``levels = ceil(log2(big/lm))`` secular merges.  Merge sizes
+      double up to ``big``, so the full-width secular passes telescope to
+      ``~2 * _DC_FULL_PASSES * big^2`` scaled by the SQUARED deflation
+      survival fraction (all-deflated blocks are skipped on both the root
+      and the pole axis; the windowed middle-way iterations are O(m*K) and
+      fold into the bookkeeping), plus ``_DC_LEVEL_PASSES * big`` streaming
+      and a ``_DC_LEVEL_FLOOR_WORDS`` latency floor per level.  ``big``
+      carries the power-of-two padding (up to 2x of m).
+
+    The decisive structural difference at large n is the constant:
+    ``_DC_FULL_PASSES * DC_DEFLATION_FACTOR^2`` of quadratic work against
+    bisection's ``max_iter`` — below the crossover the padding and
+    per-level passes make D&C the loser.  Seeds
+    ``predicted_stage3_crossover``.
+    """
+    prof = profile if profile is not None else profile_for()
+    assert solver in ("bisect", "dc"), solver
+    assert batch >= 1, batch
+    s = jnp.dtype(dtype).itemsize
+    max_iter = 60 if s == 8 else 40
+    m = max(2 * n, 1)
+    if solver == "bisect":
+        words = float(max_iter) * m * m
+        vmem = 4 * m * s
+    else:
+        lm = max(1, min(2 * leaf_n, m))
+        levels = 0
+        big = lm
+        while big < m:
+            big *= 2
+            levels += 1
+        words = float(max_iter) * lm * big                  # leaf bisection
+        alive = DC_DEFLATION_FACTOR * DC_DEFLATION_FACTOR
+        words += 2.0 * _DC_FULL_PASSES * alive * big * big
+        # windowed iterations: K = 128 index-nearest + 32 heavy poles/root
+        words += 2.0 * newton_iters * 160.0 * DC_DEFLATION_FACTOR * big
+        words += levels * (_DC_LEVEL_PASSES * big + _DC_LEVEL_FLOOR_WORDS)
+        vmem = 3 * big * big * s        # eigvec two-sided products per level
+    occupancy = max(min(1.0, batch / prof.execution_units),
+                    1.0 / prof.execution_units)
+    bytes_moved = batch * words * s
+    t_mem = bytes_moved / (FUSED_FAST_BW_RATIO * prof.mem_bw) / max(
+        1.0, min(float(batch), float(prof.execution_units)))
+    t_launch = prof.launch_overhead_s
+    return CostBreakdown(seconds=t_mem + t_launch, mem_seconds=t_mem,
+                         launch_seconds=t_launch, bytes_moved=bytes_moved,
+                         cycles=max_iter if solver == "bisect" else newton_iters,
+                         supercycles=1, wavefront=1, occupancy=occupancy,
+                         vmem_bytes=vmem, feasible=True)
+
+
+def predicted_stage3_crossover(*, dtype=jnp.float64, batch: int = 1,
+                               profile: DeviceProfile | None = None,
+                               leaf_n: int = 32,
+                               ns: tuple[int, ...] = (128, 256, 512, 1024,
+                                                      2048, 4096, 8192)
+                               ) -> int:
+    """Model-predicted bisect-vs-D&C crossover: the smallest n in ``ns``
+    from which D&C stays cheaper for every larger probed n (both curves are
+    monotone in the model, so "first win that never flips back" is exact).
+    Returns ``1 + max(ns)`` when D&C never wins — a beyond-any-probed-n
+    threshold, NOT a miss, so ``PipelineConfig`` "auto" keeps bisection.
+    Seeds ``search.search_stage3_crossover``.
+    """
+    prof = profile if profile is not None else profile_for()
+    probe = sorted(set(int(x) for x in ns if x >= 1))
+    best = 1 + (max(probe) if probe else 0)
+    for n in reversed(probe):
+        dc = stage3_cost(n, solver="dc", dtype=dtype, batch=batch,
+                         profile=prof, leaf_n=leaf_n)
+        bi = stage3_cost(n, solver="bisect", dtype=dtype, batch=batch,
+                         profile=prof, leaf_n=leaf_n)
+        if dc.seconds < bi.seconds:
+            best = n
+        else:
+            break
     return best

@@ -27,7 +27,8 @@ from repro.autotune import model as model_mod
 from repro.core import tuning
 
 __all__ = ["Candidate", "SearchResult", "candidate_grid", "search",
-           "FusedCrossoverResult", "search_fused_crossover"]
+           "FusedCrossoverResult", "search_fused_crossover",
+           "Stage3CrossoverResult", "search_stage3_crossover"]
 
 
 @dataclasses.dataclass
@@ -325,3 +326,138 @@ def search_fused_crossover(bw: int, *, dtype=jnp.float32,
                                 device_kind=model_mod.device_kind(),
                                 points=points, fused_n_max=fused_n_max,
                                 predicted_n_max=predicted)
+
+
+# ---------------------------------------------------------------------------
+# Stage-3 solver crossover search (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Stage3CrossoverResult:
+    """Measured bisect-vs-D&C stage-3 crossover for one (device, dtype, uv).
+
+    ``points`` holds ``(n, bisect_s, dc_s, agree)`` per-matrix seconds plus
+    the max |sigma_dc - sigma_bisect| / sigma_max agreement for every n
+    measured — the numerical check rides along with the timing so a cache
+    entry can never enshrine a fast-but-wrong solver.  ``dc_n_min`` is the
+    smallest measured n from which D&C stayed faster through the top of the
+    sweep; when D&C never won it is ``1 + max(ns)`` — a beyond-any-measured-n
+    threshold (``PipelineConfig`` "auto" then keeps bisection), NOT a cache
+    miss.  ``predicted_n_min`` is ``model.predicted_stage3_crossover`` for
+    the same setting, kept alongside so a wildly wrong model is visible in
+    the cache entry itself.
+    """
+    dtype: str
+    compute_uv: bool
+    device_kind: str
+    points: list[tuple[int, float, float, float]]
+    dc_n_min: int
+    predicted_n_min: int
+
+    def table(self) -> str:
+        lines = [f"stage3 crossover dtype={self.dtype} uv={self.compute_uv} "
+                 f"device={self.device_kind}",
+                 f"{'n':>6} {'bisect_us':>11} {'dc_us':>11} {'agree':>9} "
+                 f"{'winner':>7}"]
+        for n, bi_s, dc_s, agree in self.points:
+            win = "dc" if dc_s < bi_s else "bisect"
+            lines.append(f"{n:>6} {bi_s * 1e6:11.1f} {dc_s * 1e6:11.1f} "
+                         f"{agree:9.1e} {win:>7}")
+        lines.append(f"measured dc_n_min={self.dc_n_min} "
+                     f"(model predicted {self.predicted_n_min})")
+        return "\n".join(lines)
+
+    def to_entry(self) -> dict:
+        """The persistent-cache payload (``cache.store_stage3``)."""
+        return {
+            "dc_n_min": int(self.dc_n_min),
+            "predicted_n_min": int(self.predicted_n_min),
+            "points": [{"n": int(n),
+                        "bisect_us": round(b * 1e6, 3),
+                        "dc_us": round(d * 1e6, 3),
+                        "agree": float(a)}
+                       for n, b, d, a in self.points],
+            "schema": 1,
+        }
+
+
+def search_stage3_crossover(*, dtype=jnp.float64, compute_uv: bool = False,
+                            ns: tuple[int, ...] = (256, 512, 1024, 2048,
+                                                   4096),
+                            batch: int = 4, warmup: int = 1, iters: int = 2,
+                            seed: int = 0, leaf_n: int | None = None,
+                            profile: model_mod.DeviceProfile | None = None,
+                            measure_fn=None) -> Stage3CrossoverResult:
+    """Measure the stage-3 bisect-vs-D&C per-matrix crossover on this device.
+
+    Walks ``ns`` ascending, timing the SAME random bidiagonal stack
+    ``(batch, n)`` through ``core.bidiag_svd`` (bisection) and
+    ``core.bidiag_dc`` (divide and conquer) — the values path, or the full
+    ``compute_uv`` solve when asked — and recording the sigma agreement of
+    the two.  ``measure_fn(n, dc) -> (seconds, agree)`` (whole batched
+    call; agree only needs to be meaningful on one of the two variants) is
+    injectable for tests.  ``.to_entry()`` feeds ``cache.store_stage3``;
+    ``PipelineConfig.resolve(autotune=True)`` and the serve engines consume
+    it through ``cache.lookup_stage3``.
+    """
+    import jax
+
+    from repro.core import bidiag_dc as dc_mod     # deferred: keep import
+    from repro.core import bidiag_svd as bs_mod    # light for --help paths
+
+    prof = profile if profile is not None else model_mod.profile_for()
+    dname = jnp.dtype(dtype).name
+    leaf = leaf_n if leaf_n is not None else dc_mod.DEFAULT_DC_LEAF_N
+
+    if measure_fn is None:
+        import numpy as np
+
+        def measure_fn(n, dc):
+            rng = np.random.default_rng(seed)
+            # repo convention: e is (n,) with e[0] unused (e[i] = B[i-1, i])
+            d = jnp.asarray(rng.standard_normal((batch, n)).astype(dname))
+            e = jnp.asarray(rng.standard_normal((batch, n)).astype(dname))
+            if dc:
+                # The dc entry points batch (B, n) stacks natively (lax.map
+                # per matrix) — wrapping them in vmap would lower the
+                # deflation-skip conds to both-branch selects and measure a
+                # crippled solver.
+                if compute_uv:
+                    fn = lambda dd, ee: dc_mod.bidiag_dc_svd(  # noqa: E731
+                        dd, ee, leaf_n=leaf)[1]
+                else:
+                    fn = lambda dd, ee: dc_mod.bidiag_dc_singular_values(  # noqa: E731
+                        dd, ee, leaf_n=leaf)
+            else:
+                if compute_uv:
+                    fn = jax.vmap(lambda dd, ee: bs_mod.bidiag_svd(dd, ee)[1])
+                else:
+                    fn = jax.vmap(bs_mod.bidiag_singular_values)
+            sig = jax.block_until_ready(fn(d, e))
+            ref = jax.block_until_ready(
+                jax.vmap(bs_mod.bidiag_singular_values)(d, e))
+            scale = float(jnp.max(jnp.abs(ref))) or 1.0
+            agree = float(jnp.max(jnp.abs(sig - ref))) / scale
+            secs = measure_mod.measure_seconds(lambda: fn(d, e),
+                                               warmup=warmup, iters=iters)
+            return secs, agree
+
+    points: list[tuple[int, float, float, float]] = []
+    probe = sorted(set(int(x) for x in ns if x >= 1))
+    for n in probe:
+        bi_s, _ = measure_fn(n, False)
+        dc_s, agree = measure_fn(n, True)
+        points.append((n, float(bi_s) / batch, float(dc_s) / batch,
+                       float(agree)))
+    dc_n_min = 1 + (max(probe) if probe else 0)
+    for n, bi_s, dc_s, _ in reversed(points):
+        if dc_s < bi_s:
+            dc_n_min = n
+        else:
+            break
+    predicted = model_mod.predicted_stage3_crossover(
+        dtype=dtype, batch=batch, profile=prof, leaf_n=leaf)
+    return Stage3CrossoverResult(dtype=dname, compute_uv=compute_uv,
+                                 device_kind=model_mod.device_kind(),
+                                 points=points, dc_n_min=dc_n_min,
+                                 predicted_n_min=predicted)

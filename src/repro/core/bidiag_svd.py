@@ -28,7 +28,19 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["gk_offdiag", "sturm_count", "bidiag_singular_values",
-           "bidiag_svd"]
+           "bidiag_svd", "default_bisect_iters"]
+
+
+def default_bisect_iters(acc) -> int:
+    """Bisection sweeps that take the Gershgorin bracket below 1 ulp:
+    60 halvings cover fp64's 52-bit mantissa plus headroom, 40 cover fp32."""
+    return 60 if acc == jnp.float64 else 40
+
+
+def _check_max_iter(max_iter):
+    if max_iter is not None and max_iter < 1:
+        raise ValueError(
+            f"max_iter must be None (auto) or >= 1, got {max_iter}")
 
 
 def gk_offdiag(d: jax.Array, e: jax.Array) -> jax.Array:
@@ -71,15 +83,31 @@ def sturm_count(z: jax.Array, lam: jax.Array) -> jax.Array:
     return cnt
 
 
+def _gk_prescale(z: jax.Array) -> jax.Array:
+    """Exact power-of-two scale of max|z| (1 when z == 0): dividing it out
+    keeps z^2 inside the exponent range for 1e-300..1e300 inputs (the Sturm
+    pivots square z) without touching any mantissa bits."""
+    acc = z.dtype
+    zmax = jnp.max(jnp.abs(z))
+    expo = jnp.round(jnp.log2(jnp.where(zmax > 0, zmax, 1)))
+    return jnp.exp2(expo).astype(acc)
+
+
 @functools.partial(jax.jit, static_argnames=("max_iter",))
-def bidiag_singular_values(d: jax.Array, e: jax.Array, *, max_iter: int = 0) -> jax.Array:
+def bidiag_singular_values(d: jax.Array, e: jax.Array, *,
+                           max_iter: int | None = None) -> jax.Array:
     """All singular values of the bidiagonal (d, e), descending.
 
     e[0] is ignored (convention: e[i] = B[i-1, i]).  Bisection on [0, bound]
-    where bound = ||T_GK||_inf via Gershgorin.  Accepts stacked bidiagonals
-    ``(..., n)`` — bisection is embarrassingly parallel across both singular
-    values and batch, so the batch axes simply vmap.
+    where bound = ||T_GK||_inf via Gershgorin, after a power-of-two prescale
+    so extreme input magnitudes neither overflow the squared Sturm pivots
+    nor drown in the bracket's absolute slack.  ``max_iter=None`` picks the
+    dtype-matched sweep count (:func:`default_bisect_iters`); an explicit
+    value must be >= 1.  Accepts stacked bidiagonals ``(..., n)`` —
+    bisection is embarrassingly parallel across both singular values and
+    batch, so the batch axes simply vmap.
     """
+    _check_max_iter(max_iter)
     if d.ndim > 1:
         lead = d.shape[:-1]
         fn = jax.vmap(lambda dd, ee: bidiag_singular_values(dd, ee,
@@ -93,11 +121,13 @@ def bidiag_singular_values(d: jax.Array, e: jax.Array, *, max_iter: int = 0) -> 
         return jnp.abs(d)
     acc = jnp.float32 if d.dtype in (jnp.bfloat16, jnp.float16) else d.dtype
     z = gk_offdiag(d.astype(acc), e.astype(acc))
+    sc = _gk_prescale(z)
+    z = z / sc
     az = jnp.abs(z)
     pad = jnp.concatenate([jnp.zeros(1, acc), az, jnp.zeros(1, acc)])
     bound = jnp.max(pad[:-1] + pad[1:]) + jnp.asarray(1, acc)
-    if max_iter == 0:
-        max_iter = 60 if acc == jnp.float64 else 40
+    if max_iter is None:
+        max_iter = default_bisect_iters(acc)
 
     # sigma_k (1-indexed ascending) = inf{ lam : count_sigma(lam) >= k },
     # count_sigma(lam) = sturm_count(z, lam) - n   (the n eigenvalues -sigma).
@@ -115,7 +145,7 @@ def bidiag_singular_values(d: jax.Array, e: jax.Array, *, max_iter: int = 0) -> 
         return 0.5 * (lo + hi)
 
     sig = jax.vmap(solve_one)(ks)
-    return sig[::-1].astype(d.dtype)
+    return (sig[::-1] * sc).astype(d.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -159,39 +189,24 @@ def _tridiag_solve(z: jax.Array, lam: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.concatenate([xs, x_last[None]])
 
 
-@functools.partial(jax.jit, static_argnames=("max_iter", "inv_iters"))
-def bidiag_svd(d: jax.Array, e: jax.Array, *, max_iter: int = 0,
-               inv_iters: int = 2):
-    """Full SVD of the upper bidiagonal (d, e): returns (U, sigma, V^T).
+def _vectors_from_sigma(d: jax.Array, e: jax.Array, sig: jax.Array, *,
+                        inv_iters: int = 2):
+    """(U, V^T) of the bidiagonal (d, e) given its singular values ``sig``
+    (descending) — ``inv_iters`` rounds of inverse iteration on the
+    Golub–Kahan tridiagonal at each sigma, whose eigenvector interleaves
+    (v, u), then cluster reorthogonalization + left/right re-pairing.
 
-    sigma comes from the SAME bisection as :func:`bidiag_singular_values`
-    (bit-identical — the vector path never recomputes values); vectors come
-    from ``inv_iters`` rounds of inverse iteration on the Golub–Kahan
-    tridiagonal at each sigma, whose eigenvector interleaves (v, u).  Start
-    vectors are deterministic and k-dependent so exactly-degenerate
-    clusters receive independent (if not re-orthogonalized) directions.
-    Accepts stacked bidiagonals ``(..., n)`` (vmapped).
+    sigma-agnostic on purpose: the values may come from bisection OR from
+    the divide-and-conquer path (``core.bidiag_dc``) — any sigma accurate
+    to a few ulps seeds the same vector machinery.  1-D inputs, n >= 2;
+    callers own batching and the n == 1 fast path.
     """
-    if d.ndim > 1:
-        lead = d.shape[:-1]
-        fn = jax.vmap(lambda dd, ee: bidiag_svd(dd, ee, max_iter=max_iter,
-                                                inv_iters=inv_iters))
-        u, s, vt = fn(d.reshape((-1, d.shape[-1])),
-                      e.reshape((-1, e.shape[-1])))
-        n = d.shape[-1]
-        return (u.reshape(lead + (n, n)), s.reshape(lead + (n,)),
-                vt.reshape(lead + (n, n)))
-
     n = d.shape[0]
     dt = d.dtype
-    sig = bidiag_singular_values(d, e, max_iter=max_iter)       # descending
-    if n == 1:
-        # 1x1 fast path: d = u * sigma * v with u = 1, v = sign(d).
-        sgn = jnp.where(d[0] < 0, -1.0, 1.0).astype(dt)
-        return (jnp.ones((1, 1), dt), sig, sgn[None, None])
-
     acc = jnp.float32 if dt in (jnp.bfloat16, jnp.float16) else dt
     z = gk_offdiag(d.astype(acc), e.astype(acc))
+    sc = _gk_prescale(z)
+    z = z / sc
     m = 2 * n
     dd = d.astype(acc)
     ee = e.astype(acc)
@@ -215,9 +230,44 @@ def bidiag_svd(d: jax.Array, e: jax.Array, *, max_iter: int = 0,
         u = jnp.where(ok, u / jnp.where(ok, nu, 1), onehot)
         return u, v
 
-    us, vs = jax.vmap(vectors_one)(sig.astype(acc), jnp.arange(n))
+    us, vs = jax.vmap(vectors_one)(sig.astype(acc) / sc, jnp.arange(n))
     us, vs = _orthonormalize_pairs(us, vs, sig.astype(acc), dd, ee)
-    return (us.T.astype(dt), sig, vs.astype(dt))
+    return us.T.astype(dt), vs.astype(dt)
+
+
+@functools.partial(jax.jit, static_argnames=("max_iter", "inv_iters"))
+def bidiag_svd(d: jax.Array, e: jax.Array, *, max_iter: int | None = None,
+               inv_iters: int = 2):
+    """Full SVD of the upper bidiagonal (d, e): returns (U, sigma, V^T).
+
+    sigma comes from the SAME bisection as :func:`bidiag_singular_values`
+    (bit-identical — the vector path never recomputes values); vectors come
+    from :func:`_vectors_from_sigma` (inverse iteration seeded by sigma).
+    ``max_iter=None`` picks the dtype-matched bisection sweep count; an
+    explicit value must be >= 1.  Accepts stacked bidiagonals ``(..., n)``
+    (vmapped).
+    """
+    _check_max_iter(max_iter)
+    if d.ndim > 1:
+        lead = d.shape[:-1]
+        fn = jax.vmap(lambda dd, ee: bidiag_svd(dd, ee, max_iter=max_iter,
+                                                inv_iters=inv_iters))
+        u, s, vt = fn(d.reshape((-1, d.shape[-1])),
+                      e.reshape((-1, e.shape[-1])))
+        n = d.shape[-1]
+        return (u.reshape(lead + (n, n)), s.reshape(lead + (n,)),
+                vt.reshape(lead + (n, n)))
+
+    n = d.shape[0]
+    dt = d.dtype
+    sig = bidiag_singular_values(d, e, max_iter=max_iter)       # descending
+    if n == 1:
+        # 1x1 fast path: d = u * sigma * v with u = 1, v = sign(d).
+        sgn = jnp.where(d[0] < 0, -1.0, 1.0).astype(dt)
+        return (jnp.ones((1, 1), dt), sig, sgn[None, None])
+
+    u, vt = _vectors_from_sigma(d, e, sig, inv_iters=inv_iters)
+    return (u, sig, vt)
 
 
 def _orthonormalize_pairs(us, vs, sig, dd, ee):

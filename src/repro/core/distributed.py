@@ -109,8 +109,10 @@ def sharded_pipeline_dispatch(mats: jax.Array, mesh: Mesh, *, config,
 
     ``config`` is the bucket's resolved :class:`PipelineConfig` (it closes
     over the shard_map body as a static value, so one compilation per bucket
-    key survives sharding).  Mirrors the four local dispatch modes of
-    ``serve.SVDEngine``: ``(banded, compute_uv)`` selects among
+    key survives sharding) — its ``stage3`` policy rides along, so a
+    "dc"/"auto" bucket runs the divide-and-conquer bidiagonal solve on every
+    shard with no extra plumbing here.  Mirrors the four local dispatch
+    modes of ``serve.SVDEngine``: ``(banded, compute_uv)`` selects among
     ``svd_batched`` / ``banded_singular_values`` / ``svd`` / ``banded_svd``.
     Padding rows are independent zero matrices — sigma(0) = 0 — and are
     dropped before anyone sees them.

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 
 from repro.core import bulge_chasing as bc
 from repro.core import stage1 as s1
+from repro.core import bidiag_dc as s3dc
 from repro.core import bidiag_svd as s3
 from repro.core import transforms
 from repro.core import tuning
@@ -49,6 +50,26 @@ from repro.kernels import ops
 
 __all__ = ["singular_values", "banded_singular_values", "bidiagonal_of",
            "batched_singular_values", "svd_batched", "svd", "banded_svd"]
+
+
+def _stage3_values(d: jax.Array, e: jax.Array,
+                   cfg: tuning.PipelineConfig) -> jax.Array:
+    """Stage-3 dispatch (DESIGN.md §14): the config's ``stage3`` policy picks
+    the bidiagonal solver — Sturm bisection (the oracle) or the batched
+    divide-and-conquer solve, "auto" collapsing per problem size through
+    ``stage3_for``.  Both accept leading batch axes and agree on sigma to
+    ~1e-12 relative (gated by tests/test_bidiag_dc.py)."""
+    if cfg.stage3_for(d.shape[-1]) == "dc":
+        return s3dc.bidiag_dc_singular_values(d, e, leaf_n=cfg.dc_leaf_n)
+    return s3.bidiag_singular_values(d, e)
+
+
+def _stage3_svd(d: jax.Array, e: jax.Array, cfg: tuning.PipelineConfig):
+    """Full-SVD stage-3 dispatch; both solvers share the inverse-iteration
+    vector machinery, so (U, V^T) quality is policy-independent."""
+    if cfg.stage3_for(d.shape[-1]) == "dc":
+        return s3dc.bidiag_dc_svd(d, e, leaf_n=cfg.dc_leaf_n)
+    return s3.bidiag_svd(d, e)
 
 
 def _fused_path(a: jax.Array, cfg: tuning.PipelineConfig, *,
@@ -70,7 +91,7 @@ def _fused_path(a: jax.Array, cfg: tuning.PipelineConfig, *,
         return sig.reshape(lead + (n,))
     d, e, u2, vt2 = ops.fused_svd(mats, bw=cfg.bw, compute_uv=True,
                                   config=cfg)
-    ub, sig, vtb = s3.bidiag_svd(d, e)
+    ub, sig, vtb = _stage3_svd(d, e, cfg)
     # A = U2 B V2^T and B = Ub S Vb^T  =>  U = U2 Ub, V^T = Vb^T V2^T.
     u = jnp.matmul(u2, ub)
     vt = jnp.matmul(vtb, vt2)
@@ -98,14 +119,14 @@ def banded_singular_values(a: jax.Array, *, bw: int | None = None,
     if cfg.backend == "fused_small":
         return _fused_path(a, cfg, compute_uv=False)
     d, e = bidiagonal_of(a, config=cfg)
-    return s3.bidiag_singular_values(d, e)
+    return _stage3_values(d, e, cfg)
 
 
 @functools.partial(jax.jit, static_argnames=("config",))
 def _three_stage(a: jax.Array, *, config: tuning.PipelineConfig) -> jax.Array:
     banded = s1.band_reduce(a, nb=config.bw, config=config)
     d, e = bc.bidiagonalize(banded, bw=config.bw, tw=config.tw, config=config)
-    return s3.bidiag_singular_values(d, e)
+    return _stage3_values(d, e, config)
 
 
 def singular_values(a: jax.Array, *, bw: int | None = None,
@@ -187,7 +208,7 @@ def _uv_pipeline(a: jax.Array, *, config: tuning.PipelineConfig,
     u2, vt2 = transforms.accumulate_transforms(
         n, s1_tape=s1_tape, chase_tapes=chase_tapes, lead=lead,
         dtype=a.dtype, config=config)
-    ub, sig, vtb = s3.bidiag_svd(d, e)
+    ub, sig, vtb = _stage3_svd(d, e, config)
     # A = U2 B V2^T and B = Ub S Vb^T  =>  U = U2 Ub, V^T = Vb^T V2^T.
     u = jnp.matmul(u2, ub)
     vt = jnp.matmul(vtb, vt2)

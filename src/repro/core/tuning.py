@@ -31,7 +31,7 @@ __all__ = [
     "max_concurrent_sweeps", "occupancy_matrix_size",
     "vmem_working_set_bytes", "default_fuse_depth", "check_vmem_budget",
     "fused_working_set_bytes", "check_fused_vmem_budget",
-    "DEFAULT_FUSED_CROSSOVER",
+    "DEFAULT_FUSED_CROSSOVER", "STAGE3_CHOICES",
     "stage_plan", "default_bucket_batch", "ChaseConfig", "PipelineConfig",
 ]
 
@@ -206,6 +206,12 @@ def check_vmem_budget(b_in: int, tw: int, dtype=jnp.float32, *,
 # device/dtype) replaces this when available.
 DEFAULT_FUSED_CROSSOVER = 256
 
+# Stage-3 solver policy values (DESIGN.md §14).  "bisect" is the lockstep
+# Sturm bisection (O(n^2) work, bit-stable oracle), "dc" the batched
+# divide-and-conquer solve (O(n log n) secular merges — wins for large n),
+# "auto" picks per problem size via ``PipelineConfig.stage3_for``.
+STAGE3_CHOICES = ("bisect", "dc", "auto")
+
 
 def fused_working_set_bytes(n: int, dtype=jnp.float32, *,
                             compute_uv: bool = False) -> int:
@@ -314,11 +320,26 @@ class PipelineConfig:
     unroll: int = 1             # fori_loop unroll of the wavefront stage
     compute_uv: bool = False    # full SVD: record + replay reflector tapes
     fuse: int = 1               # chase super-step depth K (cycles per launch)
+    stage3: str = "bisect"      # bidiagonal solver: "bisect" | "dc" | "auto"
+    dc_leaf_n: int = 32         # D&C recursion floor (leaves solve by bisection)
+    dc_n_min: int = 2048        # "auto" routes n >= dc_n_min to "dc"
 
     @property
     def plan(self) -> tuple[tuple[int, int], ...]:
         """The tile-width schedule ((b_in, tw_i), ...) down to bidiagonal."""
         return stage_plan(self.bw, self.tw)
+
+    def stage3_for(self, n: int) -> str:
+        """Concrete stage-3 solver for a problem of size n.
+
+        ``stage3="auto"`` survives :meth:`resolve` only when no ``n`` was
+        known at resolution time (serve engines size buckets later); this is
+        where it collapses: "dc" iff ``n >= dc_n_min`` (the measured or
+        default crossover), else "bisect".  Explicit policies pass through.
+        """
+        if self.stage3 != "auto":
+            return self.stage3
+        return "dc" if n >= self.dc_n_min else "bisect"
 
     def kernel(self) -> "PipelineConfig":
         """Identity for the traced computation: serve-only fields (max_batch)
@@ -338,7 +359,9 @@ class PipelineConfig:
                 max_batch: int | None = None, unroll: int = 1,
                 compute_uv: bool = False,
                 fuse: int | None = 1, autotune: bool = False,
-                autotune_cache: str | None = None) -> "PipelineConfig":
+                autotune_cache: str | None = None,
+                stage3: str = "bisect", dc_leaf_n: int | None = None,
+                dc_n_min: int | None = None) -> "PipelineConfig":
         """Resolve every knob to a concrete value.
 
         ``backend="auto"`` and ``interpret=None`` are resolved by the backend
@@ -362,6 +385,17 @@ class PipelineConfig:
         win.  On a cache miss (or without ``n``) the analytic defaults
         above apply unchanged.  ``autotune_cache`` overrides the cache
         path (else ``$REPRO_AUTOTUNE_CACHE`` / the XDG default).
+
+        ``stage3`` picks the bidiagonal solver (DESIGN.md §14): "bisect"
+        (the default — the lockstep Sturm oracle), "dc" (the batched
+        divide-and-conquer solve of ``core.bidiag_dc``), or "auto" — "dc"
+        iff ``n >= dc_n_min``.  ``dc_n_min=None`` takes the measured
+        stage-3 crossover from the autotune cache when ``autotune=True``
+        (``cache.lookup_stage3``), else the static default
+        ``core.bidiag_dc.DEFAULT_DC_N_MIN``; ``dc_leaf_n=None`` means
+        ``DEFAULT_DC_LEAF_N``.  With ``n`` known "auto" collapses here; on
+        an n-free resolve the string survives and :meth:`stage3_for`
+        collapses it per problem size (the serve engines' per-bucket path).
         """
         from repro.kernels import ops  # deferred: registry lives kernels-side
 
@@ -396,9 +430,31 @@ class PipelineConfig:
             max_batch = default_bucket_batch(n, bw) if n else 8
         if fuse is None:
             fuse = default_fuse_depth(bw, tw, dtype, tape=compute_uv)
+        if stage3 not in STAGE3_CHOICES:
+            raise ValueError(f"stage3 must be one of {STAGE3_CHOICES}, "
+                             f"got {stage3!r}")
+        from repro.core import bidiag_dc as _dc   # deferred: import cycle
+        if dc_leaf_n is None:
+            dc_leaf_n = _dc.DEFAULT_DC_LEAF_N
+        if dc_n_min is None:
+            tuned_x = None
+            if autotune:
+                from repro.autotune import cache as _at_cache
+                from repro.autotune import model as _at_model
+                tuned_x = _at_cache.lookup_stage3(
+                    device_kind=_at_model.device_kind(),
+                    dtype=jnp.dtype(dtype).name, compute_uv=compute_uv,
+                    path=autotune_cache)
+            dc_n_min = tuned_x if tuned_x is not None else _dc.DEFAULT_DC_N_MIN
+        dc_leaf_n = max(int(dc_leaf_n), 1)
+        dc_n_min = max(int(dc_n_min), 1)
+        if stage3 == "auto" and n is not None:
+            stage3 = "dc" if n >= dc_n_min else "bisect"
         return cls(bw=bw, tw=tw, backend=backend, interpret=interpret,
                    dtype=jnp.dtype(dtype).name, max_batch=max_batch,
-                   unroll=unroll, compute_uv=compute_uv, fuse=max(int(fuse), 1))
+                   unroll=unroll, compute_uv=compute_uv,
+                   fuse=max(int(fuse), 1), stage3=stage3,
+                   dc_leaf_n=dc_leaf_n, dc_n_min=dc_n_min)
 
     @classmethod
     def of(cls, config: "PipelineConfig | None", *, bw: int | None = None,

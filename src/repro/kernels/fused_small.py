@@ -170,11 +170,12 @@ def _reduce_single(a, *, bw, compute_uv):
     return a, u, v, d, e
 
 
-def _sigma_from_bidiag(d, e, *, max_iter=0):
+def _sigma_from_bidiag(d, e, *, max_iter=None):
     """In-kernel phase 3: ``bidiag_singular_values`` arithmetic, vectorized
     over all n shift searches at once instead of vmapped (identical
-    per-element float ops: same z, same bound, same Sturm recurrence and
-    guards, same iteration count)."""
+    per-element float ops: same z, same power-of-two prescale, same bound,
+    same Sturm recurrence and guards, same iteration count).
+    ``max_iter=None`` picks the dtype default, mirroring the core path."""
     n = d.shape[0]
     dt = d.dtype
     if n == 1:
@@ -188,11 +189,18 @@ def _sigma_from_bidiag(d, e, *, max_iter=0):
     ea = e.astype(acc)
     z = (jnp.sum(jnp.where(im == 2 * jn, da[None, :], 0), axis=1)
          + jnp.sum(jnp.where(im == 2 * jn - 1, ea[None, :], 0), axis=1))
+    # Power-of-two prescale, mirroring core ``_gk_prescale``: keeps the
+    # squared Sturm pivots in range for extreme input magnitudes while
+    # changing no mantissa bits.
+    zmax = jnp.max(jnp.abs(z))
+    sc = jnp.exp2(jnp.round(
+        jnp.log2(jnp.where(zmax > 0, zmax, 1)))).astype(acc)
+    z = z / sc
     az = jnp.abs(z)
     # Gershgorin bound == max(pad[:-1] + pad[1:]) + 1 with zero end-padding.
     bound = jnp.maximum(jnp.max(az[:-1] + az[1:]),
                         jnp.maximum(az[0], az[-1])) + jnp.asarray(1, acc)
-    if max_iter == 0:
+    if max_iter is None:
         max_iter = 60 if acc == jnp.float64 else 40
     tiny = jnp.asarray(jnp.finfo(acc).tiny * 4, acc)
     idxm = im[:, 0]
@@ -223,7 +231,7 @@ def _sigma_from_bidiag(d, e, *, max_iter=0):
                                 jnp.zeros((n,), acc) + bound))
     sig = 0.5 * (lo + hi)
     rev = (jn[0][:, None] + jn[0][None, :]) == (n - 1)
-    return jnp.sum(jnp.where(rev, sig[None, :], 0), axis=1).astype(dt)
+    return (jnp.sum(jnp.where(rev, sig[None, :], 0), axis=1) * sc).astype(dt)
 
 
 # ---------------------------------------------------------------------------
@@ -256,13 +264,17 @@ def effective_bw(n: int, bw: int) -> int:
                    static_argnames=("bw", "compute_uv", "interpret",
                                     "max_iter"))
 def fused_small_svd_pallas(mats, *, bw, compute_uv=False, interpret=False,
-                           max_iter=0):
+                           max_iter=None):
     """Whole-pipeline SVD of a (B, n, n) stack, one grid step per matrix.
 
     Values mode returns sigma (B, n) descending — ONE dispatch end to end.
     ``compute_uv=True`` returns ``(d, e, u2, vt2)``; compose vectors with
-    one batched ``bidiag_svd`` (see ``core.svd``).
+    one batched ``bidiag_svd`` (see ``core.svd``).  ``max_iter=None`` picks
+    the dtype-default bisection sweeps; an explicit value must be >= 1.
     """
+    if max_iter is not None and max_iter < 1:
+        raise ValueError(
+            f"max_iter must be None (auto) or >= 1, got {max_iter}")
     mats = jnp.asarray(mats)
     assert mats.ndim == 3 and mats.shape[-1] == mats.shape[-2], mats.shape
     b, n, _ = mats.shape

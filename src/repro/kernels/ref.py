@@ -221,7 +221,7 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
 
 
 def fused_small_svd_ref(mats, *, bw: int, compute_uv: bool = False,
-                        max_iter: int = 0):
+                        max_iter: int | None = None):
     """CPU/interpret twin of ``fused_small.fused_small_svd_pallas``.
 
     vmaps the SAME single-matrix whole-pipeline body (`_reduce_single`,

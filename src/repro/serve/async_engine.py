@@ -77,10 +77,12 @@ class AsyncSVDEngine(SVDEngine):
                  batch_window_s: float = 0.01,
                  default_timeout_s: float | None = None,
                  max_pending: int = 4096, finished_history: int = 1024,
-                 fused_n_max: int | None = None):
+                 fused_n_max: int | None = None,
+                 dc_n_min: int | None = None):
         super().__init__(config, backend=backend, max_batch=max_batch,
                          autotune=autotune, autotune_cache=autotune_cache,
-                         mesh=mesh, fused_n_max=fused_n_max)
+                         mesh=mesh, fused_n_max=fused_n_max,
+                         dc_n_min=dc_n_min)
         self.finished = collections.deque(maxlen=int(finished_history))
         self.batch_window_s = float(batch_window_s)
         self.default_timeout_s = default_timeout_s

@@ -231,12 +231,24 @@ class SVDEngine:
     disables the tier; an int pins it.  Per-bucket routing is visible in
     ``metrics.snapshot()["bucket_tiers"]`` and the dispatch counters in
     ``["tiers"]`` — the serve smoke gate asserts on both.
+
+    ``dc_n_min`` is the same idea at the other end of the size axis
+    (DESIGN.md §14): staged buckets with ``n >= dc_n_min`` resolve with
+    the divide-and-conquer stage 3 (``stage3="dc"``) instead of the
+    O(n^2-iteration) Sturm bisection, so the bidiagonal solve stops
+    dominating large-n serve latency.  ``None`` (the default) uses the
+    measured crossover persisted by ``python -m repro.autotune
+    --stage3-crossover`` when ``autotune=True``, else
+    ``core.bidiag_dc.DEFAULT_DC_N_MIN``; ``0`` disables the D&C tier
+    (every bucket bisects); an int >= 1 pins the crossover.  Routing shows
+    up as the ``"staged-dc"`` tier in the same metrics surfaces.
     """
 
     def __init__(self, config=None, *, backend: str = "auto",
                  max_batch: int | None = None, autotune: bool = False,
                  autotune_cache: str | None = None, mesh=None,
-                 fused_n_max: int | None = None):
+                 fused_n_max: int | None = None,
+                 dc_n_min: int | None = None):
         from repro.core import tuning
         if config is None:
             config = tuning.PipelineConfig.resolve(backend=backend)
@@ -246,6 +258,7 @@ class SVDEngine:
         self.autotune = autotune
         self.autotune_cache = autotune_cache
         self.fused_n_max = fused_n_max           # fused-tier crossover, §13
+        self.dc_n_min = dc_n_min                 # stage-3 D&C crossover, §14
         self.mesh = mesh                         # multi-device dispatch, §12
         self.buckets: dict[tuple, list[SVDRequest]] = {}
         self.finished: list[SVDRequest] = []
@@ -290,6 +303,30 @@ class SVDEngine:
         from repro.core import tuning
         return tuning.DEFAULT_FUSED_CROSSOVER
 
+    def _dc_n_min_for(self, key: tuple) -> int:
+        """The stage-3 D&C crossover governing this bucket (DESIGN.md §14).
+
+        Precedence mirrors ``_fused_n_max_for``: an explicit engine
+        ``dc_n_min`` pins it (0 disables the D&C tier); otherwise
+        ``autotune=True`` consults the MEASURED crossover persisted by
+        ``python -m repro.autotune --stage3-crossover``; otherwise the
+        static default ``core.bidiag_dc.DEFAULT_DC_N_MIN``.
+        """
+        if self.dc_n_min is not None:
+            return int(self.dc_n_min)
+        _n, _bw, dtype, _banded, compute_uv = key
+        if self.autotune:
+            from repro.autotune import cache as at_cache
+            from repro.autotune import model as at_model
+            tuned = at_cache.lookup_stage3(
+                device_kind=at_model.device_kind(),
+                dtype=np.dtype(dtype).name, compute_uv=compute_uv,
+                path=self.autotune_cache)
+            if tuned is not None:
+                return tuned
+        from repro.core import bidiag_dc
+        return bidiag_dc.DEFAULT_DC_N_MIN
+
     def _cfg_for(self, key: tuple):
         from repro.core import tuning
         if key in self._cfg_memo:
@@ -323,12 +360,19 @@ class SVDEngine:
                       tuning.default_bucket_batch(n, bw))
             tw, fuse = self.config.tw, self.config.fuse
 
+        # Stage-3 policy (§14): "auto" + the bucket's crossover collapses to
+        # a concrete solver inside resolve (n is known here); dc_n_min < 1
+        # means "D&C disabled" — pin bisection outright.
+        dmin = self._dc_n_min_for(key)
+        stage3 = "bisect" if dmin < 1 else "auto"
+
         def resolve(backend: str):
             return tuning.PipelineConfig.resolve(
                 bw=bw, tw=tw, backend=backend,
                 interpret=self.config.interpret, dtype=np.dtype(dtype), n=n,
                 max_batch=max(1, eff), unroll=self.config.unroll,
-                compute_uv=compute_uv, fuse=fuse)
+                compute_uv=compute_uv, fuse=fuse, stage3=stage3,
+                dc_leaf_n=self.config.dc_leaf_n, dc_n_min=max(dmin, 1))
 
         cfg = None
         if n <= self._fused_n_max_for(key):
@@ -341,11 +385,19 @@ class SVDEngine:
                 cfg = None
         if cfg is None:
             cfg = resolve(self.config.backend)
-        self.metrics.set_bucket_tier(
-            key, "fused" if cfg.backend == "fused_small" else "staged",
-            n=n, backend=cfg.backend)
+        self.metrics.set_bucket_tier(key, self._tier_of(cfg, n), n=n,
+                                     backend=cfg.backend)
         self._cfg_memo[key] = cfg
         return cfg
+
+    @staticmethod
+    def _tier_of(cfg, n: int) -> str:
+        """Metrics attribution label for a resolved bucket config:
+        "fused" (§13 one-dispatch tier), "staged-dc" (staged pipeline with
+        the §14 D&C stage 3), or "staged" (bisection stage 3)."""
+        if cfg.backend == "fused_small":
+            return "fused"
+        return "staged-dc" if cfg.stage3_for(n) == "dc" else "staged"
 
     def _pop(self, key: tuple, cap: int) -> list[SVDRequest]:
         """Dequeue up to ``cap`` requests of one bucket, submission order."""
@@ -415,8 +467,7 @@ class SVDEngine:
         self.metrics.add(batches=1, served_slots=len(mats),
                          padded_slots=cfg.max_batch - len(mats))
         self.metrics.add_tier(
-            "fused" if cfg.backend == "fused_small" else "staged",
-            batches=1, served_slots=len(mats),
+            self._tier_of(cfg, n), batches=1, served_slots=len(mats),
             padded_slots=cfg.max_batch - len(mats))
         k = len(mats)
         sig = np.asarray(sig)[:k]

@@ -17,9 +17,11 @@ snapshot because every consumer wants them):
   key / total submits: the fraction of traffic that paid ZERO config
   resolution or jit compilation (each bucket key compiles exactly once).
 
-Backend attribution (DESIGN.md §13): dispatches are ALSO tallied per
-execution tier — ``"fused"`` (the one-dispatch fused_small backend) vs
-``"staged"`` (the three-stage pipeline) — via :meth:`add_tier`, and every
+Backend attribution (DESIGN.md §13/§14): dispatches are ALSO tallied per
+execution tier — ``"fused"`` (the one-dispatch fused_small backend),
+``"staged"`` (the three-stage pipeline with the bisection stage 3), or
+``"staged-dc"`` (staged with the divide-and-conquer stage 3 for large-n
+buckets) — via :meth:`add_tier`, and every
 bucket records which tier its resolved config routed it to
 (:meth:`set_bucket_tier`).  The snapshot exposes both: ``"tiers"`` holds
 per-tier batches/served_slots/padded_slots (+ fill ratio), and

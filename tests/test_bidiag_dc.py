@@ -1,0 +1,304 @@
+"""Tests for the divide-and-conquer stage-3 solver (core/bidiag_dc.py,
+DESIGN.md §14): sigma agreement with bisection/LAPACK across hostile
+spectra, the stage3= pipeline policy, the autotune crossover plumbing,
+and the serve engine's staged-dc tier."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.autotune import cache as at_cache
+from repro.autotune import search as at_search
+from repro.core import svd as svdmod
+from repro.core import tuning
+from repro.core.bidiag_dc import (DEFAULT_DC_LEAF_N, bidiag_dc_singular_values,
+                                  bidiag_dc_svd)
+from repro.core.bidiag_svd import bidiag_singular_values, bidiag_svd
+from repro.serve.engine import SVDEngine, SVDRequest
+
+
+def dense_bidiag(d, e):
+    """Dense (n, n) upper bidiagonal from the repo's (d, e) convention:
+    e is length n with e[0] UNUSED (e[i] = B[i-1, i])."""
+    n = len(d)
+    b = np.diag(np.asarray(d, float))
+    if n > 1:
+        b += np.diag(np.asarray(e, float)[1:], 1)
+    return b
+
+
+def lapack_sigma(d, e):
+    return np.linalg.svd(dense_bidiag(d, e), compute_uv=False)
+
+
+# ---------------------------------------------------------------------------
+# sigma agreement: random, clustered, extreme-scale, deflation-heavy
+# ---------------------------------------------------------------------------
+
+def test_dc_matches_lapack_random():
+    rng = np.random.default_rng(0)
+    n = 100                                   # 7 leaves of 16 -> 3 merge levels
+    d = rng.standard_normal(n)
+    e = rng.standard_normal(n)
+    s = np.asarray(bidiag_dc_singular_values(jnp.asarray(d), jnp.asarray(e),
+                                             leaf_n=16))
+    s0 = lapack_sigma(d, e)
+    np.testing.assert_allclose(s, s0, rtol=0, atol=1e-13 * s0[0])
+
+
+def test_dc_leaf_shortcircuit_matches_bisection():
+    # n <= leaf_n takes the pure-bisection path: bit-identical by construction
+    rng = np.random.default_rng(1)
+    d, e = rng.standard_normal(20), rng.standard_normal(20)
+    s_dc = bidiag_dc_singular_values(jnp.asarray(d), jnp.asarray(e), leaf_n=32)
+    s_bi = bidiag_singular_values(jnp.asarray(d), jnp.asarray(e))
+    np.testing.assert_array_equal(np.asarray(s_dc), np.asarray(s_bi))
+
+
+def test_dc_clustered_sigma():
+    # near-identical diagonal with tiny couplings: the secular solver has to
+    # separate roots pinned between nearly-coincident poles
+    n = 96
+    d = np.ones(n) + 1e-14 * np.arange(n)
+    e = np.full(n, 1e-13)
+    s = np.asarray(bidiag_dc_singular_values(jnp.asarray(d), jnp.asarray(e),
+                                             leaf_n=16))
+    s0 = lapack_sigma(d, e)
+    np.testing.assert_allclose(s, s0, rtol=0, atol=1e-13 * s0[0])
+
+
+def test_dc_extreme_dynamic_range():
+    # sigma spanning ~1e-300 .. 1e300: the prescaled GK path must not
+    # overflow the squares into inf/nan, and the solver keeps the NORMWISE
+    # contract |s - s0| <= tol * s0[0] (elementwise-relative accuracy for
+    # sigma hundreds of decades below the norm is a bisection-only
+    # property — same trade as LAPACK bdsdc vs bdsqr)
+    n = 64
+    rng = np.random.default_rng(2)
+    d = np.logspace(-300, 300, n) * np.sign(rng.standard_normal(n))
+    e = 0.5 * np.logspace(-300, 300, n)
+    s = np.asarray(bidiag_dc_singular_values(jnp.asarray(d), jnp.asarray(e),
+                                             leaf_n=16))
+    s0 = lapack_sigma(d, e)
+    assert np.isfinite(s).all()
+    np.testing.assert_allclose(s, s0, rtol=0, atol=1e-13 * s0[0])
+    np.testing.assert_allclose(s[0], s0[0], rtol=1e-12)
+
+
+def test_dc_heavy_deflation():
+    # mostly-zero couplings -> block-diagonal problem, nearly everything
+    # deflates at every merge level
+    n = 128
+    rng = np.random.default_rng(3)
+    d = rng.standard_normal(n)
+    e = np.zeros(n)
+    e[::7] = rng.standard_normal(len(e[::7])) * 1e-3
+    s = np.asarray(bidiag_dc_singular_values(jnp.asarray(d), jnp.asarray(e),
+                                             leaf_n=16))
+    s0 = lapack_sigma(d, e)
+    np.testing.assert_allclose(s, s0, rtol=0, atol=1e-13 * s0[0])
+
+
+def test_dc_degenerates():
+    # n=1: sigma = |d|
+    s = np.asarray(bidiag_dc_singular_values(jnp.asarray([-3.0]),
+                                             jnp.asarray([0.0])))
+    np.testing.assert_allclose(s, [3.0], atol=0)
+    # diagonal matrix (all couplings zero): sigma = sorted |d|
+    d = np.array([1.0, -4.0, 2.0, 0.0, -0.5] * 16)
+    e = np.zeros_like(d)
+    s = np.asarray(bidiag_dc_singular_values(jnp.asarray(d), jnp.asarray(e),
+                                             leaf_n=8))
+    np.testing.assert_allclose(s, np.sort(np.abs(d))[::-1], atol=1e-14)
+
+
+def test_dc_batched_vmap_contract():
+    rng = np.random.default_rng(4)
+    d = rng.standard_normal((3, 48))
+    e = rng.standard_normal((3, 48))
+    s = np.asarray(bidiag_dc_singular_values(jnp.asarray(d), jnp.asarray(e),
+                                             leaf_n=16))
+    assert s.shape == (3, 48)
+    for i in range(3):
+        s0 = lapack_sigma(d[i], e[i])
+        np.testing.assert_allclose(s[i], s0, rtol=0, atol=1e-13 * s0[0])
+
+
+def test_dc_svd_reconstructs():
+    rng = np.random.default_rng(5)
+    n = 80
+    d, e = rng.standard_normal(n), rng.standard_normal(n)
+    u, s, vt = bidiag_dc_svd(jnp.asarray(d), jnp.asarray(e), leaf_n=16)
+    u, s, vt = np.asarray(u), np.asarray(s), np.asarray(vt)
+    b = dense_bidiag(d, e)
+    np.testing.assert_allclose(u @ np.diag(s) @ vt, b, atol=1e-12 * s[0])
+    # inverse iteration from few-ulp sigma: orthogonality degrades a little
+    # for near-degenerate pairs (same machinery as the bisection uv path)
+    np.testing.assert_allclose(u.T @ u, np.eye(n), atol=1e-10)
+    np.testing.assert_allclose(vt @ vt.T, np.eye(n), atol=1e-10)
+
+
+def test_leaf_n_validation():
+    d = jnp.ones(4)
+    with pytest.raises(ValueError, match="leaf_n"):
+        bidiag_dc_singular_values(d, d, leaf_n=1)
+    with pytest.raises(ValueError, match="leaf_n"):
+        bidiag_dc_svd(d, d, leaf_n=0)
+
+
+def test_max_iter_validation():
+    # the old ``max_iter: int = 0`` footgun (0 silently meant "no sweeps",
+    # returning garbage brackets) is now an explicit error; None = auto
+    d = jnp.ones(4)
+    with pytest.raises(ValueError, match="max_iter"):
+        bidiag_singular_values(d, d, max_iter=0)
+    with pytest.raises(ValueError, match="max_iter"):
+        bidiag_svd(d, d, max_iter=-3)
+    s_auto = bidiag_singular_values(d, d)                  # None = dtype auto
+    s_expl = bidiag_singular_values(d, d, max_iter=60)
+    np.testing.assert_allclose(np.asarray(s_auto), np.asarray(s_expl),
+                               atol=1e-14)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 90), st.integers(0, 2**31 - 1))
+def test_dc_agrees_with_bisection_property(n, seed):
+    rng = np.random.default_rng(seed)
+    d = rng.standard_normal(n)
+    e = rng.standard_normal(n)
+    s_dc = np.asarray(bidiag_dc_singular_values(jnp.asarray(d),
+                                                jnp.asarray(e), leaf_n=16))
+    s_bi = np.asarray(bidiag_singular_values(jnp.asarray(d), jnp.asarray(e)))
+    np.testing.assert_allclose(s_dc, s_bi, rtol=0, atol=1e-12 * s_bi[0])
+
+
+# ---------------------------------------------------------------------------
+# stage3= pipeline policy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stage3", ["bisect", "dc"])
+def test_pipeline_stage3_backends_agree(stage3):
+    rng = np.random.default_rng(6)
+    n = 48
+    a = rng.standard_normal((n, n))
+    cfg = tuning.PipelineConfig.resolve(bw=4, tw=2, backend="ref",
+                                        dtype=np.float64, n=n,
+                                        stage3=stage3, dc_n_min=1,
+                                        dc_leaf_n=16)
+    s = np.asarray(svdmod.singular_values(jnp.asarray(a), config=cfg))
+    s0 = np.linalg.svd(a, compute_uv=False)
+    np.testing.assert_allclose(s, s0, rtol=0, atol=1e-11 * s0[0])
+
+
+def test_pipeline_stage3_dc_uv_path():
+    rng = np.random.default_rng(7)
+    n = 32
+    a = rng.standard_normal((n, n))
+    cfg = tuning.PipelineConfig.resolve(bw=4, tw=2, backend="ref",
+                                        dtype=np.float64, n=n,
+                                        compute_uv=True, stage3="dc",
+                                        dc_n_min=1, dc_leaf_n=8)
+    u, s, vt = svdmod.svd(jnp.asarray(a), config=cfg)
+    u, s, vt = np.asarray(u), np.asarray(s), np.asarray(vt)
+    np.testing.assert_allclose(u @ np.diag(s) @ vt, a, atol=1e-10 * s[0])
+
+
+def test_stage3_auto_resolution():
+    # with n known, "auto" collapses at resolve time by the dc_n_min threshold
+    lo = tuning.PipelineConfig.resolve(bw=4, dtype=np.float64, n=64,
+                                       stage3="auto", dc_n_min=128)
+    hi = tuning.PipelineConfig.resolve(bw=4, dtype=np.float64, n=256,
+                                       stage3="auto", dc_n_min=128)
+    assert lo.stage3 == "bisect" and hi.stage3 == "dc"
+    # n-free resolve keeps the policy; stage3_for collapses per problem
+    free = tuning.PipelineConfig.resolve(bw=4, dtype=np.float64,
+                                         stage3="auto", dc_n_min=128)
+    assert free.stage3 == "auto"
+    assert free.stage3_for(64) == "bisect" and free.stage3_for(128) == "dc"
+    # explicit choices pass through stage3_for untouched
+    assert lo.stage3_for(10_000) == "bisect"
+    with pytest.raises(ValueError, match="stage3"):
+        tuning.PipelineConfig.resolve(bw=4, stage3="qr")
+
+
+def test_stage3_defaults_from_bidiag_dc():
+    cfg = tuning.PipelineConfig.resolve(bw=4, dtype=np.float64)
+    assert cfg.stage3 == "bisect"
+    assert cfg.dc_leaf_n == DEFAULT_DC_LEAF_N
+
+
+# ---------------------------------------------------------------------------
+# autotune: cache round-trip + measured crossover search
+# ---------------------------------------------------------------------------
+
+def test_cache_stage3_roundtrip(tmp_path):
+    p = str(tmp_path / "tune.json")
+    assert at_cache.lookup_stage3(device_kind="cpu", dtype="float64",
+                                  compute_uv=False, path=p) is None
+    at_cache.store_stage3({"dc_n_min": 1536}, device_kind="cpu",
+                          dtype="float64", compute_uv=False, path=p)
+    assert at_cache.lookup_stage3(device_kind="cpu", dtype="float64",
+                                  compute_uv=False, path=p) == 1536
+    # uv axis is part of the key: the values-path entry must not leak
+    assert at_cache.lookup_stage3(device_kind="cpu", dtype="float64",
+                                  compute_uv=True, path=p) is None
+    # and the resolver consumes it for dc_n_min when autotune is on
+    cfg = tuning.PipelineConfig.resolve(bw=4, dtype=np.float64, n=2048,
+                                        stage3="auto", autotune=True,
+                                        autotune_cache=p)
+    assert cfg.dc_n_min == 1536 and cfg.stage3 == "dc"
+
+
+def test_search_stage3_crossover_injected():
+    def fake_measure(n, dc):
+        # dc wins from 512 up; perfect agreement
+        return (1e-3 if (dc and n >= 512) or (not dc and n < 512)
+                else 2e-3), 1e-16
+    res = at_search.search_stage3_crossover(ns=(128, 256, 512, 1024),
+                                            measure_fn=fake_measure)
+    assert res.dc_n_min == 512
+    entry = res.to_entry()
+    assert entry["dc_n_min"] == 512 and len(entry["points"]) == 4
+
+
+def test_search_stage3_crossover_never_wins_sentinel():
+    res = at_search.search_stage3_crossover(
+        ns=(128, 256), measure_fn=lambda n, dc: (2e-3 if dc else 1e-3, 1e-16))
+    assert res.dc_n_min == 257          # beyond-any-measured-n sentinel
+
+
+# ---------------------------------------------------------------------------
+# serve engine: staged-dc tier
+# ---------------------------------------------------------------------------
+
+def _run_engine(dc_n_min):
+    rng = np.random.default_rng(8)
+    eng = SVDEngine(tuning.PipelineConfig.resolve(bw=4, tw=2, backend="ref",
+                                                  dtype=np.float64,
+                                                  max_batch=4),
+                    fused_n_max=0, dc_n_min=dc_n_min)
+    mats = rng.standard_normal((3, 24, 24))
+    for uid, m in enumerate(mats):
+        eng.submit(SVDRequest(uid=uid, matrix=m, bw=4))
+    done = eng.run()
+    assert len(done) == 3 and all(r.done and r.error is None for r in done)
+    for r in done:
+        s0 = np.linalg.svd(mats[r.uid], compute_uv=False)
+        np.testing.assert_allclose(r.sigma, s0, atol=1e-11 * s0[0])
+    return eng.metrics.snapshot()
+
+
+def test_engine_staged_dc_tier():
+    snap = _run_engine(dc_n_min=1)       # pin crossover below every n
+    tiers = {v["tier"] for v in snap["bucket_tiers"].values()}
+    assert tiers == {"staged-dc"}
+    assert snap["tiers"]["staged-dc"]["batches"] > 0
+
+
+def test_engine_dc_disabled():
+    snap = _run_engine(dc_n_min=0)       # 0 = pin bisection
+    tiers = {v["tier"] for v in snap["bucket_tiers"].values()}
+    assert tiers == {"staged"}
+    assert "staged-dc" not in snap["tiers"]
