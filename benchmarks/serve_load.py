@@ -26,6 +26,20 @@ asserts the >= 3x engine-over-serial throughput acceptance bar.  As a
 ``benchmarks.run`` suite it emits the usual ``name,us_per_call,derived``
 rows (us_per_call = mean per-request service/latency — the stable,
 regression-gated column; percentiles ride in ``derived``).
+
+``--chaos`` (DESIGN.md §15) re-runs the same measurement under a seeded
+:class:`repro.serve.FaultPlan` — scripted + probabilistic dispatch errors
+and NaN sigma corruption on the primary path — and asserts the fabric
+absorbed every injected fault: ZERO client-visible failures, sigma still
+within the oracle bar, p99 still within budget, and the plan actually
+fired (a chaos gate that injected nothing would be a no-op gate).
+
+Accounting is unified client-side (:func:`_client_account`): every
+submitted request is classified from its FUTURE's resolution into exactly
+one of ok / failed / timed_out / dropped — so the four always sum to
+``submitted`` — and cross-checked against the engine's own counters
+(completed / failed+rejected / timed_out), with any disagreement flagged
+as ``consistent=False`` and failed by the gate.
 """
 
 from __future__ import annotations
@@ -111,6 +125,52 @@ def _tune_bucket_cache(mix, *, backend="ref", seed=0):
     return path, bests
 
 
+def _client_account(reqs, done_at, errors, snap):
+    """Client-view accounting, unified for both drivers (DESIGN.md §15).
+
+    Classifies every submitted request from its future's resolution into
+    EXACTLY one of ``ok`` / ``failed`` / ``timed_out`` / ``dropped``, so
+    the identity ``ok + failed + timed_out + dropped == submitted`` holds
+    by construction.  The engine's own counters are a different view of
+    the same run (admission rejections resolve the future but never reach
+    ``_finish``, so they count ``rejected`` there and ``failed`` here);
+    ``consistent`` is the cross-check that the two views describe the
+    same requests:
+
+    * client ``ok``        == engine ``completed``
+    * client ``timed_out`` == engine ``timed_out``
+    * client ``failed``    == engine ``failed`` + ``rejected``
+    * client ``dropped``   == submitted - every engine-finished request
+
+    The pre-fix bug this replaces: ``poisson_run`` reported the engine's
+    ``failed`` next to a future-view ``dropped``, so an admission-rejected
+    request was invisible in both columns and the totals did not add up.
+    """
+    ok = failed = timed_out = 0
+    for r in reqs:
+        if r.uid not in done_at:
+            continue                              # dropped: never resolved
+        exc = errors.get(r.uid)
+        if exc is None:
+            ok += 1
+        elif isinstance(exc, TimeoutError):
+            timed_out += 1
+        else:
+            failed += 1
+    submitted = len(reqs)
+    dropped = submitted - len([r for r in reqs if r.uid in done_at])
+    engine_finished = (snap["completed"] + snap["failed"]
+                       + snap["timed_out"] + snap["rejected"])
+    return {
+        "submitted": submitted, "ok": ok, "failed": failed,
+        "timed_out": timed_out, "dropped": dropped,
+        "consistent": (ok == snap["completed"]
+                       and timed_out == snap["timed_out"]
+                       and failed == snap["failed"] + snap["rejected"]
+                       and dropped == submitted - engine_finished),
+    }
+
+
 def _serial_serve(reqs, cfgs):
     """The no-serving-tier baseline: one pipeline call per request."""
     import jax.numpy as jnp
@@ -133,7 +193,8 @@ def _engine_cfgs(eng, reqs):
 
 
 def throughput_compare(mix, count, *, backend="ref", seed=0, window_s=0.002,
-                       autotune_cache=None, fused_n_max=None, dc_n_min=None):
+                       autotune_cache=None, fused_n_max=None, dc_n_min=None,
+                       faults=None):
     """Serial vs micro-batched engine throughput on an identical workload.
 
     Returns ``(rows, result)`` — CSV rows plus a dict with the speedup and
@@ -141,7 +202,10 @@ def throughput_compare(mix, count, *, backend="ref", seed=0, window_s=0.002,
     ``autotune_cache`` (see :func:`_tune_bucket_cache`) the engine buckets
     at the MEASURED per-bucket optimum instead of the analytic default;
     the serial baseline resolves through the same configs, so the speedup
-    isolates batching, not knob differences.
+    isolates batching, not knob differences.  ``faults`` (a seeded
+    ``repro.serve.FaultPlan``, the ``--chaos`` path) is injected into the
+    ENGINE only — the serial baseline stays the clean oracle the engine's
+    fault-absorbed answers are checked against.
     """
     from benchmarks.common import row
     from repro.core import svd as svdmod
@@ -154,7 +218,8 @@ def throughput_compare(mix, count, *, backend="ref", seed=0, window_s=0.002,
                          autotune=autotune_cache is not None,
                          autotune_cache=autotune_cache,
                          max_batch=32 if autotune_cache else None,
-                         fused_n_max=fused_n_max, dc_n_min=dc_n_min)
+                         fused_n_max=fused_n_max, dc_n_min=dc_n_min,
+                         faults=faults)
     cfgs = _engine_cfgs(eng, reqs_engine)
 
     # Warm every compiled program OUTSIDE the timed windows (bucket-capacity
@@ -171,15 +236,16 @@ def throughput_compare(mix, count, *, backend="ref", seed=0, window_s=0.002,
 
     t0 = time.monotonic()
     futs = [eng.submit(r) for r in reqs_engine]    # open-loop burst
-    done, eng_failures = [], []
-    for f in futs:
+    done, errors = [], {}
+    for r, f in zip(reqs_engine, futs):
         try:
             done.append(f.result())
         except Exception as exc:                   # noqa: BLE001 — report,
             done.append(None)                      # don't abort the harness
-            eng_failures.append(repr(exc))
+            errors[r.uid] = exc
     t_engine = time.monotonic() - t0
     eng.stop()
+    eng_failures = [repr(e) for e in errors.values()]
 
     # Correctness at equal precision: engine sigma vs the direct
     # values-only path on the same matrices.  The 1e-12 acceptance bar
@@ -216,22 +282,32 @@ def throughput_compare(mix, count, *, backend="ref", seed=0, window_s=0.002,
             f"fill={snap['batch_fill_ratio']:.2f};"
             f"batches={snap['batches']}"),
     ]
+    # Unified client-view accounting (same classifier as poisson_run): a
+    # burst driver resolves every future, so dropped is 0 here — but the
+    # identity and the engine cross-check are asserted all the same.
+    acct = _client_account(reqs_engine,
+                           {r.uid: True for r in reqs_engine}, errors, snap)
     return rows, {"t_serial_s": t_serial, "t_engine_s": t_engine,
                   "speedup": speedup, "sigma_max_err": err64,
                   "sigma_max_err_f32": err32,
                   "engine_failures": eng_failures,
+                  "accounting": acct,
                   "engine_metrics": snap}
 
 
 def poisson_run(mix, count, rate, *, backend="ref", seed=0, window_s=0.005,
                 timeout_s=None, autotune_cache=None, fused_n_max=None,
-                dc_n_min=None):
+                dc_n_min=None, faults=None):
     """Open-loop Poisson arrivals at ``rate`` req/s; per-request latency.
 
     Returns ``(rows, result)``; ``result`` carries the latency percentiles,
-    achieved throughput, and the engine metrics snapshot the smoke gate
-    asserts on (every request must COMPLETE: served or failed with an
-    error on the request — never silently dropped).
+    achieved throughput, the unified client-view accounting
+    (:func:`_client_account` — ok/failed/timed_out/dropped summing to
+    submitted, cross-checked against the engine counters), and the engine
+    metrics snapshot the smoke gate asserts on (every request must
+    COMPLETE: served or failed with an error on the request — never
+    silently dropped).  ``faults`` injects a ``repro.serve.FaultPlan``
+    into the engine's primary path (the ``--chaos`` gate).
     """
     from benchmarks.common import row
     from repro.serve import AsyncSVDEngine, ServeMetrics
@@ -243,7 +319,8 @@ def poisson_run(mix, count, rate, *, backend="ref", seed=0, window_s=0.005,
                          autotune=autotune_cache is not None,
                          autotune_cache=autotune_cache,
                          max_batch=32 if autotune_cache else None,
-                         fused_n_max=fused_n_max, dc_n_min=dc_n_min)
+                         fused_n_max=fused_n_max, dc_n_min=dc_n_min,
+                         faults=faults)
     # Warm every bucket's compile outside the timed run (never under the
     # engine's default deadline — compiles take seconds).
     [f.result() for f in [eng.submit(r, timeout_s=float("inf"))
@@ -282,12 +359,17 @@ def poisson_run(mix, count, rate, *, backend="ref", seed=0, window_s=0.005,
     snap = eng.metrics.snapshot()
     pcts = (np.percentile(lat_ms, [50, 95, 99])
             if lat_ms.size else np.zeros(3))
+    # Client-view accounting (the unified classifier shared with
+    # throughput_compare): ok + failed + timed_out + dropped == submitted,
+    # with the engine-counter cross-check in acct["consistent"].
+    acct = _client_account(reqs, done_at, errors, snap)
     result = {
         "requests": count, "rate_rps": rate,
-        "completed": int(snap["completed"]), "failed": int(snap["failed"]),
-        "timed_out": int(snap["timed_out"]),
+        "completed": acct["ok"], "failed": acct["failed"],
+        "timed_out": acct["timed_out"],
         "rejected": int(snap["rejected"]),
-        "dropped": count - len(done_at),         # future never resolved
+        "dropped": acct["dropped"],              # future never resolved
+        "accounting": acct,
         "throughput_rps": len(lat_ms) / t_total if t_total > 0 else 0.0,
         "latency_ms": {"p50": float(pcts[0]), "p95": float(pcts[1]),
                        "p99": float(pcts[2]),
@@ -380,6 +462,10 @@ def main(argv=None) -> None:
                     help="assert the >=3x engine-over-serial acceptance bar "
                          "(implied in --smoke the bar stays off: smoke "
                          "shapes are too small to be meaningful)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject a seeded FaultPlan (scripted + 5%% dispatch "
+                         "errors, 1%% NaN sigma) into the engines and assert "
+                         "the fabric absorbed every fault (DESIGN.md §15)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -400,10 +486,28 @@ def main(argv=None) -> None:
             print(f"# tuned bucket n={n} bw={bw} {dt} uv={int(uv)}: "
                   f"tw={best.tw} fuse={best.fuse} max_batch={best.batch}",
                   flush=True)
+    faults_thr = faults_poi = None
+    if args.chaos:
+        # One plan per engine (each is stateful); scripted ordinals land
+        # past the warmup dispatches (one per mix bucket) so at least one
+        # dispatch error and one NaN corruption are GUARANTEED to hit the
+        # measured run, on top of the probabilistic rates.
+        from repro.serve import FaultPlan
+        nwarm = len(mix)
+        faults_thr = FaultPlan(seed=args.seed + 101,
+                               dispatch_error_rate=0.05, nan_rate=0.01,
+                               dispatch_errors_at=(nwarm,),
+                               nan_at=(nwarm + 1,))
+        faults_poi = FaultPlan(seed=args.seed + 202,
+                               dispatch_error_rate=0.05, nan_rate=0.01,
+                               dispatch_errors_at=(nwarm,),
+                               nan_at=(nwarm + 1,))
     t_rows, thr = throughput_compare(mix, count, backend="ref",
-                                     seed=args.seed, autotune_cache=cache)
+                                     seed=args.seed, autotune_cache=cache,
+                                     faults=faults_thr)
     p_rows, poi = poisson_run(mix, max(count // 2, 12), rate, backend="ref",
-                              seed=args.seed, autotune_cache=cache)
+                              seed=args.seed, autotune_cache=cache,
+                              faults=faults_poi)
     for line in t_rows + p_rows:
         print(line, flush=True)
 
@@ -415,6 +519,9 @@ def main(argv=None) -> None:
         "throughput": thr,
         "poisson": poi,
     }
+    if args.chaos:
+        report["chaos"] = {"throughput_faults": faults_thr.snapshot(),
+                           "poisson_faults": faults_poi.snapshot()}
     if args.json:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)
@@ -434,6 +541,30 @@ def main(argv=None) -> None:
         if poi[what]:
             failures.append(f"{poi[what]} request(s) {what} "
                             f"(must be 0)")
+    for name, res in (("throughput", thr), ("poisson", poi)):
+        if not res["accounting"]["consistent"]:
+            failures.append(f"{name} accounting inconsistent: client view "
+                            f"{res['accounting']} vs engine counters "
+                            f"{res['engine_metrics']}")
+    if args.chaos:
+        # The chaos gate (DESIGN.md §15): the plans must have actually
+        # fired (an inert chaos run gates nothing), and everything above —
+        # zero client-visible failures, the sigma oracle bar, the p99
+        # budget — must STILL hold; the fault-tolerance counters show the
+        # absorption happened on the fabric's retry/degraded paths.
+        for name, plan in (("throughput", faults_thr), ("poisson", faults_poi)):
+            snap_f = plan.snapshot()
+            fired = (snap_f["dispatch_error"] + snap_f["device_loss"]
+                     + snap_f["nan"] + snap_f["inf"])
+            if not fired:
+                failures.append(f"chaos: no faults injected into the "
+                                f"{name} run ({snap_f})")
+        absorbed = sum(res["engine_metrics"][k]
+                       for res in (thr, poi)
+                       for k in ("retried", "degraded"))
+        if not absorbed:
+            print("# chaos note: all injected faults landed outside the "
+                  "measured window (absorbed during warmup)", flush=True)
     if args.smoke:
         # Fused-tier routing (DESIGN.md §13): every smoke-mix bucket is
         # small-n (n <= DEFAULT_FUSED_CROSSOVER), so the metrics MUST show
@@ -460,10 +591,16 @@ def main(argv=None) -> None:
     if args.check and not args.smoke and thr["speedup"] < 3.0:
         failures.append(f"engine speedup {thr['speedup']:.2f}x < 3x "
                         f"acceptance bar")
+    chaos_tail = ""
+    if args.chaos:
+        tm, pm = thr["engine_metrics"], poi["engine_metrics"]
+        chaos_tail = (f" chaos_retried={tm['retried'] + pm['retried']}"
+                      f" chaos_degraded={tm['degraded'] + pm['degraded']}")
     print(f"# speedup={thr['speedup']:.2f}x "
           f"sigma_err={thr['sigma_max_err']:.2e} "
           f"p99={poi['latency_ms']['p99']:.1f}ms "
-          f"timed_out={poi['timed_out']} dropped={poi['dropped']}",
+          f"timed_out={poi['timed_out']} dropped={poi['dropped']}"
+          f"{chaos_tail}",
           flush=True)
     if failures:
         for f in failures:

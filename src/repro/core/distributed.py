@@ -101,7 +101,8 @@ def shard_pad(b: int, shards: int) -> int:
 
 def sharded_pipeline_dispatch(mats: jax.Array, mesh: Mesh, *, config,
                               banded: bool = False, compute_uv: bool = False,
-                              batch_axes: tuple[str, ...] = ("data",)):
+                              batch_axes: tuple[str, ...] = ("data",),
+                              faults=None, on_shard_retry=None):
     """Serve-tier mesh dispatch (DESIGN.md §12): pad the leading batch axis
     to shard divisibility, run the bucket's exact pipeline batch-sharded —
     every device chases its own sub-batch fully locally, zero collectives —
@@ -116,6 +117,22 @@ def sharded_pipeline_dispatch(mats: jax.Array, mesh: Mesh, *, config,
     ``svd_batched`` / ``banded_singular_values`` / ``svd`` / ``banded_svd``.
     Padding rows are independent zero matrices — sigma(0) = 0 — and are
     dropped before anyone sees them.
+
+    Device-drop handling (DESIGN.md §15): a raising sharded dispatch (a
+    real device/mesh failure takes the whole ``shard_map`` call down) is
+    re-dispatched UNSHARDED through the same per-shard pipeline body — one
+    compilation of the same program at full batch — so the batch still
+    completes on whatever is left.  A *simulated* per-shard loss
+    (``faults``, a :class:`~repro.serve.faults.FaultPlan` whose
+    ``lost_shards`` names the dropped shard indices) voids the lost
+    shards' slices and re-dispatches exactly those slices through the SAME
+    compiled sharded program (the lost slice is tiled across the mesh and
+    the victim shard's lane is read back) — the re-dispatched slice is
+    therefore bitwise-identical to what the clean run would have produced,
+    which ``tests/test_serve_faults.py`` asserts.  Every re-dispatched
+    shard (and the all-shards unsharded fallback) is reported through
+    ``on_shard_retry(count)`` — the engines wire it to
+    ``ServeMetrics.sharded_retries``.
     """
     shards = 1
     for ax in batch_axes:
@@ -139,7 +156,35 @@ def sharded_pipeline_dispatch(mats: jax.Array, mesh: Mesh, *, config,
     out_specs = (spec, spec, spec) if compute_uv else spec
     fn = jax.shard_map(local, mesh=mesh, in_specs=(spec,),
                        out_specs=out_specs, check_vma=False)
-    out = fn(mats)
+    try:
+        out = fn(mats)
+    except Exception:                            # noqa: BLE001 — mesh down
+        # Real failure path: the sharded dispatch is gone as a unit.
+        # Re-dispatch the whole batch unsharded (same pipeline body).
+        if on_shard_retry is not None:
+            on_shard_retry(shards)
+        out = local(mats)
+    else:
+        lost = faults.lost_shards(shards) if faults is not None else []
+        if lost:
+            per = mats.shape[0] // shards
+            parts = list(out) if compute_uv else [out]
+            for j in sorted(set(lost)):
+                sl = slice(j * per, (j + 1) * per)
+                # Void the lost shard's slice (its device's results are
+                # gone), then recompute it through the SAME compiled
+                # sharded program: tile the slice across the mesh so
+                # shard j sees exactly the bytes it saw in the clean run
+                # -> bitwise-identical recovery.
+                reps = (shards,) + (1,) * (mats.ndim - 1)
+                rout = fn(jnp.tile(mats[sl], reps))
+                rparts = list(rout) if compute_uv else [rout]
+                for i, (arr, rarr) in enumerate(zip(parts, rparts)):
+                    voided = arr.at[sl].set(jnp.nan)
+                    parts[i] = voided.at[sl].set(rarr[sl])
+                if on_shard_retry is not None:
+                    on_shard_retry(1)
+            out = tuple(parts) if compute_uv else parts[0]
     if compute_uv:
         u, sig, vt = out
         return u[:b0], sig[:b0], vt[:b0]

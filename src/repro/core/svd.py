@@ -39,6 +39,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import bulge_chasing as bc
 from repro.core import stage1 as s1
@@ -49,7 +50,95 @@ from repro.core import tuning
 from repro.kernels import ops
 
 __all__ = ["singular_values", "banded_singular_values", "bidiagonal_of",
-           "batched_singular_values", "svd_batched", "svd", "banded_svd"]
+           "batched_singular_values", "svd_batched", "svd", "banded_svd",
+           "NumericalFault", "validate_sigma", "validate_uv",
+           "spot_check_svd"]
+
+
+# ---------------------------------------------------------------------------
+# Numerical-health guards (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+class NumericalFault(ArithmeticError):
+    """A pipeline result failed post-solve validation (non-finite,
+    negative, or unsorted sigma; non-finite vectors; residual blow-up).
+
+    Raised by :func:`validate_sigma` / :func:`validate_uv` /
+    :func:`spot_check_svd` — and by the entry points below under
+    ``check=True``.  The serve retry layer (DESIGN.md §15) treats it as
+    retryable-once-then-degrade: a numerically-poisoned dispatch rarely
+    heals on replay, so after one retry the request is re-served on the
+    trusted ref tier instead of burning more attempts.
+    """
+
+
+def _sigma_tol(s: np.ndarray) -> float:
+    """Slack for the non-negativity / descending-order checks: rounding
+    may leave sigma off by a few ulps of the spectrum's scale."""
+    if s.size == 0:
+        return 0.0
+    eps = np.finfo(s.dtype).eps if np.issubdtype(s.dtype, np.floating) else 0.0
+    smax = float(np.max(np.abs(s[np.isfinite(s)]))) if np.isfinite(s).any() \
+        else 1.0
+    return 16.0 * eps * max(smax, 1.0)
+
+
+def validate_sigma(sig, *, name: str = "sigma") -> None:
+    """Cheap post-solve health check on a sigma block (any leading axes):
+    every value finite, non-negative (to rounding slack), and descending
+    along the last axis.  Raises :class:`NumericalFault` on violation.
+
+    Runs on host (forces a device sync) — call it OUTSIDE jit, after the
+    result is already needed on host anyway (the serve engines validate
+    the numpy block they are about to hand to callers).
+    """
+    s = np.asarray(sig)
+    if s.size == 0:
+        return
+    if not np.isfinite(s).all():
+        bad = int(np.size(s) - np.count_nonzero(np.isfinite(s)))
+        raise NumericalFault(f"{name}: {bad} non-finite value(s)")
+    tol = _sigma_tol(s)
+    mn = float(s.min())
+    if mn < -tol:
+        raise NumericalFault(f"{name}: negative value {mn:.3e} < -{tol:.1e}")
+    if s.shape[-1] >= 2:
+        rise = float((s[..., 1:] - s[..., :-1]).max())
+        if rise > tol:
+            raise NumericalFault(
+                f"{name}: not descending (adjacent rise {rise:.3e} "
+                f"> {tol:.1e})")
+
+
+def validate_uv(u, vt, *, name: str = "uv") -> None:
+    """Finiteness check on the accumulated singular-vector factors."""
+    for tag, m in (("U", u), ("V^T", vt)):
+        if m is None:
+            continue
+        a = np.asarray(m)
+        if not np.isfinite(a).all():
+            raise NumericalFault(f"{name}: non-finite entries in {tag}")
+
+
+def spot_check_svd(a, u, sig, vt, *, rtol: float | None = None) -> None:
+    """Residual spot-check ``||A - U diag(s) V^T||_F / ||A||_F`` on the
+    FIRST matrix of a (possibly batched) full-SVD result — one small
+    matmul, not a per-matrix sweep.  Raises :class:`NumericalFault` when
+    the relative residual exceeds ``rtol`` (default: ``50 * n * eps`` of
+    the working dtype, loose enough for every healthy backend)."""
+    a = np.asarray(a).reshape((-1,) + np.asarray(a).shape[-2:])[0]
+    u0 = np.asarray(u).reshape((-1,) + np.asarray(u).shape[-2:])[0]
+    vt0 = np.asarray(vt).reshape((-1,) + np.asarray(vt).shape[-2:])[0]
+    s0 = np.asarray(sig).reshape((-1, np.asarray(sig).shape[-1]))[0]
+    n = a.shape[-1]
+    if rtol is None:
+        rtol = 50.0 * n * float(np.finfo(a.dtype).eps)
+    denom = max(float(np.linalg.norm(a)), np.finfo(a.dtype).tiny)
+    resid = float(np.linalg.norm(a - (u0 * s0) @ vt0)) / denom
+    if not np.isfinite(resid) or resid > rtol:
+        raise NumericalFault(
+            f"residual spot-check failed: ||A - USV^T||/||A|| = "
+            f"{resid:.3e} > {rtol:.1e} (n={n})")
 
 
 def _stage3_values(d: jax.Array, e: jax.Array,
@@ -111,15 +200,25 @@ def bidiagonal_of(a: jax.Array, *, bw: int | None = None,
 
 def banded_singular_values(a: jax.Array, *, bw: int | None = None,
                            tw: int | None = None, backend: str = "auto",
-                           config: tuning.PipelineConfig | None = None
-                           ) -> jax.Array:
-    """Singular values of upper-banded (..., n, n) (stages 2+3), descending."""
+                           config: tuning.PipelineConfig | None = None,
+                           check: bool = False) -> jax.Array:
+    """Singular values of upper-banded (..., n, n) (stages 2+3), descending.
+
+    ``check=True`` runs the post-solve health guard (:func:`validate_sigma`,
+    DESIGN.md §15) on the result — raising :class:`NumericalFault` instead
+    of returning garbage when a chase went numerically bad.  It forces a
+    host sync, so leave it off inside jit-hot loops.
+    """
     cfg = tuning.PipelineConfig.of(config, bw=bw, tw=tw, backend=backend,
                                    dtype=a.dtype, n=a.shape[-1])
     if cfg.backend == "fused_small":
-        return _fused_path(a, cfg, compute_uv=False)
-    d, e = bidiagonal_of(a, config=cfg)
-    return _stage3_values(d, e, cfg)
+        sig = _fused_path(a, cfg, compute_uv=False)
+    else:
+        d, e = bidiagonal_of(a, config=cfg)
+        sig = _stage3_values(d, e, cfg)
+    if check:
+        validate_sigma(sig)
+    return sig
 
 
 @functools.partial(jax.jit, static_argnames=("config",))
@@ -131,7 +230,8 @@ def _three_stage(a: jax.Array, *, config: tuning.PipelineConfig) -> jax.Array:
 
 def singular_values(a: jax.Array, *, bw: int | None = None,
                     tw: int | None = None, backend: str = "auto",
-                    config: tuning.PipelineConfig | None = None) -> jax.Array:
+                    config: tuning.PipelineConfig | None = None,
+                    check: bool = False) -> jax.Array:
     """All singular values of dense (..., n, n), descending (3 stages).
 
     ``bw`` defaults to 32 when neither it nor ``config`` is given; passing a
@@ -139,18 +239,26 @@ def singular_values(a: jax.Array, *, bw: int | None = None,
     precedence).  Config resolution happens outside the jit boundary, and the
     config's serve-only fields are normalized out of the cache key, so
     configs differing only in bucket sizing do not recompile.
+
+    ``check=True`` validates the result post-solve (finite, non-negative,
+    descending — :func:`validate_sigma`) and raises
+    :class:`NumericalFault` on violation (DESIGN.md §15).
     """
     cfg = tuning.PipelineConfig.of(config, bw=bw, tw=tw, backend=backend,
                                    dtype=a.dtype, n=a.shape[-1])
     if cfg.backend == "fused_small":
-        return _fused_path(a, cfg, compute_uv=False)
-    return _three_stage(a, config=cfg)
+        sig = _fused_path(a, cfg, compute_uv=False)
+    else:
+        sig = _three_stage(a, config=cfg)
+    if check:
+        validate_sigma(sig)
+    return sig
 
 
 def batched_singular_values(mats: jax.Array, *, bw: int | None = None,
                             tw: int | None = None, backend: str = "auto",
-                            config: tuning.PipelineConfig | None = None
-                            ) -> jax.Array:
+                            config: tuning.PipelineConfig | None = None,
+                            check: bool = False) -> jax.Array:
     """Batch-native three-stage pipeline: (B, n, n) -> (B, n) descending.
 
     Unlike a vmapped loop, the B chases share one wavefront: every global
@@ -158,7 +266,8 @@ def batched_singular_values(mats: jax.Array, *, bw: int | None = None,
     n this is the difference between an idle and a saturated chip.
     """
     assert mats.ndim == 3, f"expected stacked (B, n, n), got {mats.shape}"
-    return singular_values(mats, bw=bw, tw=tw, backend=backend, config=config)
+    return singular_values(mats, bw=bw, tw=tw, backend=backend, config=config,
+                           check=check)
 
 
 def svd_batched(mats: jax.Array,
@@ -215,9 +324,22 @@ def _uv_pipeline(a: jax.Array, *, config: tuning.PipelineConfig,
     return u, sig, vt
 
 
+def _checked_uv(a, out, *, check: bool):
+    """Post-solve health guard for a full-SVD result (DESIGN.md §15):
+    sigma invariants, U/V^T finiteness, and the one-matrix residual
+    spot-check — the cheapest test that the FACTORS (not just the
+    spectrum) are trustworthy."""
+    if check:
+        u, sig, vt = out
+        validate_sigma(sig)
+        validate_uv(u, vt)
+        spot_check_svd(a, u, sig, vt)
+    return out
+
+
 def svd(a: jax.Array, *, bw: int | None = None, tw: int | None = None,
         backend: str = "auto", config: tuning.PipelineConfig | None = None,
-        compute_uv: bool = True):
+        compute_uv: bool = True, check: bool = False):
     """Full SVD of dense (..., n, n): ``(U, sigma, V^T)``, sigma descending.
 
     ``compute_uv=False`` degrades to :func:`singular_values` (and the sigma
@@ -225,25 +347,47 @@ def svd(a: jax.Array, *, bw: int | None = None, tw: int | None = None,
     alongside the same band arithmetic, it never alters it).  Batched inputs
     run batch-native end to end, including the tape replay (one fused
     ``tape_apply`` call over all B*G wavefront slots per cycle).
+
+    ``check=True`` (DESIGN.md §15) validates sigma, checks U/V^T
+    finiteness, and residual-spot-checks the first matrix; violations
+    raise :class:`NumericalFault`.
     """
     cfg = tuning.PipelineConfig.of(config, bw=bw, tw=tw, backend=backend,
                                    dtype=a.dtype, n=a.shape[-1])
     if cfg.backend == "fused_small":
-        return _fused_path(a, cfg, compute_uv=compute_uv)
+        if not compute_uv:
+            sig = _fused_path(a, cfg, compute_uv=False)
+            if check:
+                validate_sigma(sig)
+            return sig
+        return _checked_uv(a, _fused_path(a, cfg, compute_uv=True),
+                           check=check)
     if not compute_uv:
-        return _three_stage(a, config=cfg)
-    return _uv_pipeline(a, config=cfg, banded=False)
+        sig = _three_stage(a, config=cfg)
+        if check:
+            validate_sigma(sig)
+        return sig
+    return _checked_uv(a, _uv_pipeline(a, config=cfg, banded=False),
+                       check=check)
 
 
 def banded_svd(a: jax.Array, *, bw: int | None = None, tw: int | None = None,
                backend: str = "auto",
                config: tuning.PipelineConfig | None = None,
-               compute_uv: bool = True):
-    """Full SVD of upper-banded (..., n, n) (stages 2+3 only)."""
+               compute_uv: bool = True, check: bool = False):
+    """Full SVD of upper-banded (..., n, n) (stages 2+3 only); ``check=``
+    as in :func:`svd`."""
     cfg = tuning.PipelineConfig.of(config, bw=bw, tw=tw, backend=backend,
                                    dtype=a.dtype, n=a.shape[-1])
     if cfg.backend == "fused_small":
-        return _fused_path(a, cfg, compute_uv=compute_uv)
+        if not compute_uv:
+            sig = _fused_path(a, cfg, compute_uv=False)
+            if check:
+                validate_sigma(sig)
+            return sig
+        return _checked_uv(a, _fused_path(a, cfg, compute_uv=True),
+                           check=check)
     if not compute_uv:
-        return banded_singular_values(a, config=cfg)
-    return _uv_pipeline(a, config=cfg, banded=True)
+        return banded_singular_values(a, config=cfg, check=check)
+    return _checked_uv(a, _uv_pipeline(a, config=cfg, banded=True),
+                       check=check)

@@ -132,6 +132,11 @@ def main_svd(args):
         print(f"latency p50/p95/p99 = {p50:.1f}/{p95:.1f}/{p99:.1f} ms")
     print("metrics:", {k: round(v, 3) if isinstance(v, float) else v
                        for k, v in sorted(snap.items())})
+    # Operator health view (DESIGN.md §15): headline status plus the
+    # failure-taxonomy counters (retries, quarantines, degraded traffic).
+    health = eng.metrics.health()
+    print("health:", {k: round(v, 4) if isinstance(v, float) else v
+                      for k, v in health.items()})
 
 
 if __name__ == "__main__":

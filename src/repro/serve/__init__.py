@@ -4,12 +4,22 @@ Sync tier: ``Engine`` (tokens) and ``SVDEngine`` (spectral, shape-bucketed).
 Async tier (DESIGN.md §12): ``AsyncSVDEngine`` — thread-safe micro-batching
 queue, deadline-aware admission, futures-based delivery, optional
 multi-device (mesh) dispatch; ``ServeMetrics`` counters live on every
-engine as ``.metrics``.
+engine as ``.metrics``.  Fault tolerance (DESIGN.md §15): ``FaultPlan``
+(deterministic injection), ``RetryPolicy`` (backoff ladder),
+``BucketQuarantine`` (per-bucket circuit breaker) in ``serve/faults.py``;
+the typed ``NumericalFault`` lives in ``core/svd.py`` and is re-exported
+here for serve-side callers.
 """
+from repro.core.svd import NumericalFault
 from repro.serve.async_engine import AsyncSVDEngine, QueueFullError
 from repro.serve.engine import (Engine, Request, ServeConfig,
                                 SVDEngine, SVDRequest)
+from repro.serve.faults import (BucketQuarantine, FaultPlan,
+                                InjectedDeviceLoss, InjectedDispatchError,
+                                InjectedFault, RetryPolicy)
 from repro.serve.metrics import ServeMetrics
 
 __all__ = ["Engine", "Request", "ServeConfig", "SVDEngine", "SVDRequest",
-           "AsyncSVDEngine", "QueueFullError", "ServeMetrics"]
+           "AsyncSVDEngine", "QueueFullError", "ServeMetrics",
+           "FaultPlan", "RetryPolicy", "BucketQuarantine", "NumericalFault",
+           "InjectedFault", "InjectedDispatchError", "InjectedDeviceLoss"]

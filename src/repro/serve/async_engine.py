@@ -25,6 +25,17 @@ batched pipeline:
 * **Multi-device dispatch** — with a ``mesh`` (see
   ``repro.launch.mesh.serve_mesh``), full buckets are batch-sharded across
   all local devices through ``core.distributed.sharded_pipeline_dispatch``.
+* **Fault tolerance** (DESIGN.md §15) — inherited from the sync engine:
+  numerical-health guards on every result, the retry/backoff ladder, the
+  per-bucket quarantine circuit breaker, and the degraded ref tier.  Two
+  async-specific points: (1) deadlines are re-checked at COMPLETION, not
+  only at admission — a request finished past its deadline resolves its
+  future with :class:`TimeoutError` (counted ``timed_out``; the late
+  results stay on the request object); (2) backoff sleeps run on the
+  dispatcher thread, so a retrying bucket briefly delays its neighbors —
+  backoffs are capped (``RetryPolicy.backoff_max_s``, 100 ms default)
+  precisely so a sick bucket cannot stall the fabric, and a repeatedly
+  sick bucket trips its breaker and stops retrying altogether.
 
 The dispatcher itself is the ONE consumer of the buckets; the compute
 happens outside the engine lock, so admission keeps flowing while a batch
@@ -78,11 +89,13 @@ class AsyncSVDEngine(SVDEngine):
                  default_timeout_s: float | None = None,
                  max_pending: int = 4096, finished_history: int = 1024,
                  fused_n_max: int | None = None,
-                 dc_n_min: int | None = None):
+                 dc_n_min: int | None = None,
+                 faults=None, retry=None, residual_check: bool = False):
         super().__init__(config, backend=backend, max_batch=max_batch,
                          autotune=autotune, autotune_cache=autotune_cache,
                          mesh=mesh, fused_n_max=fused_n_max,
-                         dc_n_min=dc_n_min)
+                         dc_n_min=dc_n_min, faults=faults, retry=retry,
+                         residual_check=residual_check)
         self.finished = collections.deque(maxlen=int(finished_history))
         self.batch_window_s = float(batch_window_s)
         self.default_timeout_s = default_timeout_s

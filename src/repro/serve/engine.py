@@ -28,11 +28,13 @@ deadlines, mesh dispatch) lives in ``serve/async_engine.py`` and extends
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.faults import BucketQuarantine, RetryPolicy
 from repro.serve.metrics import ServeMetrics
 
 __all__ = ["Request", "ServeConfig", "Engine",
@@ -242,13 +244,34 @@ class SVDEngine:
     ``core.bidiag_dc.DEFAULT_DC_N_MIN``; ``0`` disables the D&C tier
     (every bucket bisects); an int >= 1 pins the crossover.  Routing shows
     up as the ``"staged-dc"`` tier in the same metrics surfaces.
+
+    **Fault tolerance (DESIGN.md §15).**  Every dispatched result passes
+    the numerical-health guard (``core.svd.validate_sigma`` + vector
+    finiteness; ``residual_check=True`` adds the per-batch residual
+    spot-check for ``compute_uv`` buckets) — a NaN-producing chase raises
+    ``NumericalFault`` instead of returning garbage.  A failed dispatch
+    enters the ``retry`` ladder (:class:`~repro.serve.faults.RetryPolicy`:
+    bounded attempts, capped exponential backoff, deadline-aware — a
+    backoff that would outlive the request's deadline is never slept);
+    exhausted requests are re-served on the DEGRADED tier — the bucket's
+    shape on the trusted ``ref`` backend with the bisection stage 3 —
+    attributed as ``"degraded-ref"`` in the metrics.  Repeated
+    primary-path failures trip the bucket's circuit breaker
+    (:class:`~repro.serve.faults.BucketQuarantine`): an OPEN bucket routes
+    straight to the degraded tier until the cooldown elapses, then one
+    HALF-OPEN primary trial decides recovery.  ``faults`` (a
+    :class:`~repro.serve.faults.FaultPlan`) injects deterministic
+    failures into the primary path for testing; the degraded tier is
+    never injected.
     """
 
     def __init__(self, config=None, *, backend: str = "auto",
                  max_batch: int | None = None, autotune: bool = False,
                  autotune_cache: str | None = None, mesh=None,
                  fused_n_max: int | None = None,
-                 dc_n_min: int | None = None):
+                 dc_n_min: int | None = None,
+                 faults=None, retry: RetryPolicy | None = None,
+                 residual_check: bool = False):
         from repro.core import tuning
         if config is None:
             config = tuning.PipelineConfig.resolve(backend=backend)
@@ -260,11 +283,18 @@ class SVDEngine:
         self.fused_n_max = fused_n_max           # fused-tier crossover, §13
         self.dc_n_min = dc_n_min                 # stage-3 D&C crossover, §14
         self.mesh = mesh                         # multi-device dispatch, §12
+        self.faults = faults                     # fault injection hook, §15
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.residual_check = bool(residual_check)
+        self.quarantine = BucketQuarantine(
+            threshold=self.retry.quarantine_threshold,
+            cooldown_s=self.retry.quarantine_cooldown_s)
         self.buckets: dict[tuple, list[SVDRequest]] = {}
         self.finished: list[SVDRequest] = []
         self.calls = 0                           # batched pipeline invocations
         self.metrics = ServeMetrics()
         self._cfg_memo: dict[tuple, object] = {}  # bucket key -> resolved cfg
+        self._degraded_memo: dict[tuple, object] = {}  # key -> ref-tier cfg
 
     def submit(self, req: SVDRequest) -> None:
         assert req.matrix.ndim == 2 and req.matrix.shape[0] == req.matrix.shape[1]
@@ -410,7 +440,20 @@ class SVDEngine:
 
     def _finish(self, req: SVDRequest, error: Exception | None = None) -> None:
         """Complete one request exactly once: results already on it, or
-        ``error``; resolve its future (async callers) either way."""
+        ``error``; resolve its future (async callers) either way.
+
+        Deadline semantics are re-checked HERE, not only at admission: a
+        request admitted in time but completed after its deadline is a
+        timeout to the caller (nobody is waiting anymore) and counts in
+        ``timed_out`` — its results stay on the request object for
+        observability (the future resolves with :class:`TimeoutError`,
+        ``req.sigma`` keeps the late answer)."""
+        if (error is None and req.deadline is not None
+                and time.monotonic() > req.deadline):
+            error = TimeoutError(
+                f"request {req.uid} completed after its deadline "
+                f"({time.monotonic() - req.deadline:.3f}s late); late "
+                f"results remain on the request")
         req.error = error
         req.done = True
         self.finished.append(req)
@@ -429,13 +472,24 @@ class SVDEngine:
             except Exception:                    # noqa: BLE001 — caller
                 pass                             # cancelled; result stays on req
 
-    def _pipeline_call(self, key: tuple, cfg, mats: list[np.ndarray]):
+    def _pipeline_call(self, key: tuple, cfg, mats: list[np.ndarray], *,
+                       tier: str | None = None, inject: bool = True):
         """ONE batched pipeline dispatch for ``mats`` (padded to the bucket
         capacity): returns np ``(sigma, u, vt)`` sliced to ``len(mats)``
         (``u``/``vt`` None for values-only buckets).  Routes through the
-        mesh (``core.distributed``) when the engine owns one."""
+        mesh (``core.distributed``) when the engine owns one.
+
+        Fault-tolerance plumbing (DESIGN.md §15): when the engine owns a
+        :class:`~repro.serve.faults.FaultPlan` and ``inject`` is True
+        (primary path only — degraded dispatches pass ``inject=False``),
+        the plan may delay/raise before dispatch and corrupt the sigma
+        block after it.  Every result — injected or not — then passes the
+        numerical-health guard, raising ``NumericalFault`` on garbage."""
         from repro.core import svd as svdmod
         n, _bw, dtype, banded, compute_uv = key
+        faults = self.faults if inject else None
+        if faults is not None:
+            faults.before_dispatch(key)          # may sleep and/or raise
         batch = np.zeros((cfg.max_batch, n, n), dtype)       # pad: zero matrices
         for i, m in enumerate(mats):
             batch[i] = m
@@ -450,7 +504,8 @@ class SVDEngine:
             from repro.core import distributed
             out = distributed.sharded_pipeline_dispatch(
                 stacked, self.mesh, config=cfg, banded=banded,
-                compute_uv=compute_uv)
+                compute_uv=compute_uv, faults=faults,
+                on_shard_retry=lambda k_: self.metrics.add(sharded_retries=k_))
             if compute_uv:
                 u, sig, vt = out
             else:
@@ -467,36 +522,136 @@ class SVDEngine:
         self.metrics.add(batches=1, served_slots=len(mats),
                          padded_slots=cfg.max_batch - len(mats))
         self.metrics.add_tier(
-            self._tier_of(cfg, n), batches=1, served_slots=len(mats),
+            tier or self._tier_of(cfg, n), batches=1, served_slots=len(mats),
             padded_slots=cfg.max_batch - len(mats))
         k = len(mats)
         sig = np.asarray(sig)[:k]
         if compute_uv:
             u, vt = np.asarray(u)[:k], np.asarray(vt)[:k]
+        if faults is not None:
+            sig = faults.corrupt_sigma(sig)
+        # Numerical-health guard (§15): a NaN/Inf/garbage sigma must raise
+        # NumericalFault here — never reach a caller as a silent answer.
+        svdmod.validate_sigma(sig)
+        if compute_uv:
+            svdmod.validate_uv(u, vt)
+            if self.residual_check:
+                svdmod.spot_check_svd(batch[:k], u, sig, vt)
         return sig, u, vt
 
-    def _serve_batch(self, key: tuple, cfg, reqs: list[SVDRequest]) -> int:
-        """Serve one dequeued batch; every request in ``reqs`` COMPLETES, in
-        submission (FIFO) order — a failure is surfaced on the request
-        (``req.error``) rather than raised out of the step.  A batch-level
-        failure falls back to per-request dispatches so one poison request
-        cannot take down its co-batched neighbors."""
+    # ------------------------------------------------------------------
+    # fault-tolerant dispatch (DESIGN.md §15)
+    # ------------------------------------------------------------------
+
+    def _degraded_cfg(self, key: tuple):
+        """The degraded-tier config for a bucket: same shapes, trusted
+        ``ref`` backend, bisection stage 3 (the oracle solver).  Memoized
+        per key — one resolution and one compile ever, like the primary."""
+        from repro.core import tuning
+        if key not in self._degraded_memo:
+            n, bw, dtype, _banded, compute_uv = key
+            self._degraded_memo[key] = tuning.PipelineConfig.resolve(
+                bw=bw, backend="ref", dtype=np.dtype(dtype), n=n,
+                max_batch=self.config.max_batch, unroll=self.config.unroll,
+                compute_uv=compute_uv, stage3="bisect")
+        return self._degraded_memo[key]
+
+    def _note_failure(self, key: tuple, exc: Exception) -> None:
+        """Record one primary-path failure: last-error attribution plus
+        the circuit breaker's consecutive-failure count."""
+        self.metrics.set_bucket_error(key, exc)
+        if self.quarantine.record_failure(key):
+            self.metrics.add(quarantined=1)
+            self.metrics.set_bucket_quarantined(key, True)
+
+    def _note_success(self, key: tuple) -> None:
+        if self.quarantine.record_success(key):
+            self.metrics.set_bucket_quarantined(key, False)
+
+    def _deliver(self, key: tuple, reqs: list[SVDRequest], sig, u, vt) -> None:
+        """Copy one dispatch's results onto its requests and complete them
+        in submission (FIFO) order."""
         _n, _bw, _dtype, _banded, compute_uv = key
-        try:
-            sig, u, vt = self._pipeline_call(key, cfg,
-                                             [r.matrix for r in reqs])
-        except Exception as exc:                 # noqa: BLE001 — isolate below
-            if len(reqs) == 1:
-                self._finish(reqs[0], error=exc)
-                return 1
-            for r in reqs:                       # FIFO order preserved
-                self._serve_batch(key, cfg, [r])
-            return len(reqs)
         for i, r in enumerate(reqs):
             r.sigma = sig[i]
             if compute_uv:
                 r.u, r.vt = u[i], vt[i]
             self._finish(r)
+
+    def _serve_degraded(self, key: tuple, reqs: list[SVDRequest],
+                        cause: Exception | None) -> int:
+        """Serve ``reqs`` on the degraded ref tier (quarantined bucket, or
+        a request whose primary-path retries are exhausted).  The degraded
+        dispatch is never fault-injected and still passes the numerical
+        guard; if even the ref tier fails, the request finally surfaces
+        ``cause`` (the primary-path error — more actionable than the
+        fallback's own)."""
+        try:
+            dcfg = self._degraded_cfg(key)
+            sig, u, vt = self._pipeline_call(key, dcfg,
+                                             [r.matrix for r in reqs],
+                                             tier="degraded-ref",
+                                             inject=False)
+        except Exception as exc:                 # noqa: BLE001 — last resort
+            for r in reqs:
+                self._finish(r, error=cause if cause is not None else exc)
+            return len(reqs)
+        self.metrics.add(degraded=len(reqs))
+        self._deliver(key, reqs, sig, u, vt)
+        return len(reqs)
+
+    def _retry_request(self, key: tuple, cfg, req: SVDRequest,
+                       exc: Exception) -> int:
+        """The per-request retry ladder (DESIGN.md §15): after a failed
+        primary attempt, retry with capped exponential backoff up to the
+        policy's attempt bound (tighter for ``NumericalFault``), never
+        sleeping past the request's deadline; on exhaustion fall through
+        to the degraded ref tier."""
+        policy = self.retry
+        failures = 1
+        self._note_failure(key, exc)
+        while failures < policy.attempts_for(exc):
+            delay = policy.backoff_for(failures, deadline=req.deadline,
+                                       now=time.monotonic())
+            if delay is None:                    # would sleep past deadline
+                break
+            if delay > 0:
+                time.sleep(delay)
+            if self.quarantine.active(key):      # tripped meanwhile
+                break
+            self.metrics.add(retried=1)
+            try:
+                sig, u, vt = self._pipeline_call(key, cfg, [req.matrix])
+            except Exception as exc2:            # noqa: BLE001 — ladder
+                exc = exc2
+                failures += 1
+                self._note_failure(key, exc)
+                continue
+            self._note_success(key)
+            self._deliver(key, [req], sig, u, vt)
+            return 1
+        return self._serve_degraded(key, [req], cause=exc)
+
+    def _serve_batch(self, key: tuple, cfg, reqs: list[SVDRequest]) -> int:
+        """Serve one dequeued batch; every request in ``reqs`` COMPLETES, in
+        submission (FIFO) order — a failure is surfaced on the request
+        (``req.error``) rather than raised out of the step.  A batch-level
+        failure falls back to per-request dispatches (isolating poison
+        requests), each of which enters the retry/backoff/degrade ladder
+        (§15); a quarantined bucket skips the primary path entirely."""
+        if self.quarantine.active(key):
+            return self._serve_degraded(key, reqs, cause=None)
+        try:
+            sig, u, vt = self._pipeline_call(key, cfg,
+                                             [r.matrix for r in reqs])
+        except Exception as exc:                 # noqa: BLE001 — isolate below
+            if len(reqs) == 1:
+                return self._retry_request(key, cfg, reqs[0], exc)
+            for r in reqs:                       # FIFO order preserved
+                self._serve_batch(key, cfg, [r])
+            return len(reqs)
+        self._note_success(key)
+        self._deliver(key, reqs, sig, u, vt)
         return len(reqs)
 
     def step(self) -> int:

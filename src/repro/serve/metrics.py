@@ -19,15 +19,23 @@ snapshot because every consumer wants them):
 
 Backend attribution (DESIGN.md §13/§14): dispatches are ALSO tallied per
 execution tier — ``"fused"`` (the one-dispatch fused_small backend),
-``"staged"`` (the three-stage pipeline with the bisection stage 3), or
+``"staged"`` (the three-stage pipeline with the bisection stage 3),
 ``"staged-dc"`` (staged with the divide-and-conquer stage 3 for large-n
-buckets) — via :meth:`add_tier`, and every
+buckets), or ``"degraded-ref"`` (the §15 fault-tolerance fallback) — via
+:meth:`add_tier`, and every
 bucket records which tier its resolved config routed it to
 (:meth:`set_bucket_tier`).  The snapshot exposes both: ``"tiers"`` holds
 per-tier batches/served_slots/padded_slots (+ fill ratio), and
 ``"bucket_tiers"`` maps the bucket key to ``{"tier", "n", "backend"}`` —
 sliceable proof of WHERE each size class actually ran, which the serve
 smoke gate asserts on.
+
+Failure taxonomy (DESIGN.md §15): ``retried`` / ``quarantined`` /
+``degraded`` / ``sharded_retries`` count the fault-tolerance layer's
+interventions, ``set_bucket_error`` keeps the LAST error (+ a running
+count) per bucket key, ``set_bucket_quarantined`` tracks which buckets
+are circuit-broken right now, and :meth:`health` condenses it all into
+the one dict an operator (or ``launch/serve.py --svd``) wants to read.
 """
 
 from __future__ import annotations
@@ -51,6 +59,11 @@ class ServeMetrics:
         "served_slots",       # sum of len(reqs) over dispatches
         "padded_slots",       # sum of (capacity - len(reqs)) over dispatches
         "bucket_hits",        # submits into an already-seen bucket key
+        # --- failure taxonomy (DESIGN.md §15) ---
+        "retried",            # primary-path retry attempts (backoff ladder)
+        "quarantined",        # bucket circuit-breaker trips (not requests)
+        "degraded",           # requests served on the degraded ref tier
+        "sharded_retries",    # mesh shards re-dispatched after a loss
     )
 
     # per-tier slice of the dispatch counters ("fused" vs "staged")
@@ -63,6 +76,8 @@ class ServeMetrics:
         self.queue_depth = 0                  # gauge, set by the engine
         self._tiers: dict[str, dict[str, int]] = {}
         self._bucket_tiers: dict[str, dict] = {}
+        self._bucket_errors: dict[str, dict] = {}   # key -> last_error+count
+        self._quarantined: set[str] = set()         # keys circuit-broken now
 
     def add(self, **deltas: int) -> None:
         """Atomically bump counters: ``metrics.add(submitted=1, ...)``."""
@@ -93,6 +108,25 @@ class ServeMetrics:
             self._bucket_tiers[str(key)] = {"tier": tier, "n": int(n),
                                             "backend": backend}
 
+    def set_bucket_error(self, key, exc: BaseException) -> None:
+        """Record the latest failure for a bucket key (DESIGN.md §15):
+        ``last_error`` is the repr of the most recent exception, ``count``
+        the number of recorded failures for that key since engine start."""
+        with self._lock:
+            row = self._bucket_errors.setdefault(
+                str(key), {"last_error": "", "count": 0})
+            row["last_error"] = repr(exc)
+            row["count"] += 1
+
+    def set_bucket_quarantined(self, key, active: bool) -> None:
+        """Track circuit-breaker membership: ``active=True`` when a bucket
+        trips OPEN, ``False`` when a primary-path success recovers it."""
+        with self._lock:
+            if active:
+                self._quarantined.add(str(key))
+            else:
+                self._quarantined.discard(str(key))
+
     def set_queue_depth(self, depth: int) -> None:
         with self._lock:
             self.queue_depth = int(depth)
@@ -105,6 +139,9 @@ class ServeMetrics:
             tiers = {t: dict(row) for t, row in self._tiers.items()}
             snap["bucket_tiers"] = {k: dict(v)
                                     for k, v in self._bucket_tiers.items()}
+            snap["bucket_errors"] = {k: dict(v)
+                                     for k, v in self._bucket_errors.items()}
+            snap["quarantined_buckets"] = sorted(self._quarantined)
         slots = snap["served_slots"] + snap["padded_slots"]
         snap["batch_fill_ratio"] = (snap["served_slots"] / slots
                                     if slots else 0.0)
@@ -116,6 +153,40 @@ class ServeMetrics:
                                        if tslots else 0.0)
         snap["tiers"] = tiers
         return snap
+
+    def health(self) -> dict:
+        """Operator-facing condensed view of the failure taxonomy
+        (DESIGN.md §15).  ``status`` is the headline:
+
+        * ``"ok"``       — no client-visible failures, no open quarantines,
+          no degraded traffic (retries may have happened and healed).
+        * ``"degraded"`` — everyone is still getting answers, but some
+          through the ref fallback tier and/or with buckets circuit-broken.
+        * ``"failing"``  — requests have surfaced errors to clients.
+        """
+        snap = self.snapshot()
+        finished = snap["completed"] + snap["failed"] + snap["timed_out"]
+        if snap["failed"]:
+            status = "failing"
+        elif snap["degraded"] or snap["quarantined_buckets"]:
+            status = "degraded"
+        else:
+            status = "ok"
+        return {
+            "status": status,
+            "submitted": snap["submitted"],
+            "completed": snap["completed"],
+            "client_error_rate": ((snap["failed"] + snap["timed_out"])
+                                  / finished if finished else 0.0),
+            "retried": snap["retried"],
+            "degraded": snap["degraded"],
+            "quarantined": snap["quarantined"],
+            "sharded_retries": snap["sharded_retries"],
+            "timed_out": snap["timed_out"],
+            "rejected": snap["rejected"],
+            "quarantined_buckets": snap["quarantined_buckets"],
+            "bucket_errors": snap["bucket_errors"],
+        }
 
     def __repr__(self) -> str:
         snap = self.snapshot()
