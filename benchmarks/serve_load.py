@@ -194,7 +194,7 @@ def _engine_cfgs(eng, reqs):
 
 def throughput_compare(mix, count, *, backend="ref", seed=0, window_s=0.002,
                        autotune_cache=None, fused_n_max=None, dc_n_min=None,
-                       faults=None):
+                       faults=None, tracer=None):
     """Serial vs micro-batched engine throughput on an identical workload.
 
     Returns ``(rows, result)`` — CSV rows plus a dict with the speedup and
@@ -219,7 +219,7 @@ def throughput_compare(mix, count, *, backend="ref", seed=0, window_s=0.002,
                          autotune_cache=autotune_cache,
                          max_batch=32 if autotune_cache else None,
                          fused_n_max=fused_n_max, dc_n_min=dc_n_min,
-                         faults=faults)
+                         faults=faults, tracer=tracer)
     cfgs = _engine_cfgs(eng, reqs_engine)
 
     # Warm every compiled program OUTSIDE the timed windows (bucket-capacity
@@ -297,7 +297,7 @@ def throughput_compare(mix, count, *, backend="ref", seed=0, window_s=0.002,
 
 def poisson_run(mix, count, rate, *, backend="ref", seed=0, window_s=0.005,
                 timeout_s=None, autotune_cache=None, fused_n_max=None,
-                dc_n_min=None, faults=None):
+                dc_n_min=None, faults=None, tracer=None, metrics_server=None):
     """Open-loop Poisson arrivals at ``rate`` req/s; per-request latency.
 
     Returns ``(rows, result)``; ``result`` carries the latency percentiles,
@@ -308,8 +308,22 @@ def poisson_run(mix, count, rate, *, backend="ref", seed=0, window_s=0.005,
     COMPLETE: served or failed with an error on the request — never
     silently dropped).  ``faults`` injects a ``repro.serve.FaultPlan``
     into the engine's primary path (the ``--chaos`` gate).
+
+    Latency percentiles are HISTOGRAM-driven (DESIGN.md §16): each
+    successful completion streams its client-view latency into a
+    fixed-log-bucket :class:`repro.obs.StreamingHistogram` inside the
+    future callback — the reported p50/p95/p99 come from the histogram,
+    not a raw-sample array.  A shadow list of exact samples is kept ONLY
+    for the smoke gate's cross-check (``latency_exact_ms``), which asserts
+    the histogram percentiles land within one bucket width of numpy's
+    exact ones.  ``tracer`` (a :class:`repro.obs.Tracer`) threads into the
+    engine for dispatch/retry/degraded spans; ``metrics_server`` (a
+    :class:`repro.obs.MetricsServer`) gets the live engine metrics
+    registered under ``"svd"`` before traffic starts, so the run is
+    scrapeable while in flight.
     """
     from benchmarks.common import row
+    from repro.obs import StreamingHistogram
     from repro.serve import AsyncSVDEngine, ServeMetrics
 
     rng = np.random.default_rng(seed + 7)
@@ -320,23 +334,36 @@ def poisson_run(mix, count, rate, *, backend="ref", seed=0, window_s=0.005,
                          autotune_cache=autotune_cache,
                          max_batch=32 if autotune_cache else None,
                          fused_n_max=fused_n_max, dc_n_min=dc_n_min,
-                         faults=faults)
+                         faults=faults, tracer=tracer)
     # Warm every bucket's compile outside the timed run (never under the
     # engine's default deadline — compiles take seconds).
     [f.result() for f in [eng.submit(r, timeout_s=float("inf"))
                           for r in _mix_cover(mix, seed + 1)]]
     eng.metrics = ServeMetrics()         # report the timed run, not warmup
+    if metrics_server is not None:
+        metrics_server.register("svd", eng.metrics)
 
     done_at: dict[int, float] = {}
     errors: dict[int, Exception] = {}
+    hist = StreamingHistogram()              # client-view latency, seconds
+    exact_s: list[float] = []                # shadow samples (smoke check)
     ev = threading.Event()
 
-    def _cb(uid):
+    def _cb(req):
         def cb(fut):
-            done_at[uid] = time.monotonic()
+            now = time.monotonic()
+            done_at[req.uid] = now
             exc = fut.exception()
             if exc is not None:
-                errors[uid] = exc
+                errors[req.uid] = exc
+            elif req.arrived is not None:
+                # Successful only — admission rejections never reach
+                # _finish, so their req.error stays None while the future
+                # carries the exception; counting them would skew the
+                # percentiles low.
+                lat = now - req.arrived
+                hist.add(lat)
+                exact_s.append(lat)
             if len(done_at) == count:
                 ev.set()
         return cb
@@ -345,20 +372,13 @@ def poisson_run(mix, count, rate, *, backend="ref", seed=0, window_s=0.005,
     t0 = time.monotonic()
     for r, gap in zip(reqs, gaps):
         time.sleep(gap)                          # open loop: never waits
-        eng.submit(r).add_done_callback(_cb(r.uid))
+        eng.submit(r).add_done_callback(_cb(r))
     ev.wait(timeout=600)
     t_total = time.monotonic() - t0
     eng.stop()
 
-    # Latency samples: resolved AND successful.  Filter on the errors dict
-    # (from the future), not req.error — admission rejections never reach
-    # _finish, so their req.error stays None while the future carries the
-    # exception; counting them would skew the percentiles low.
-    lat_ms = np.asarray([(done_at[r.uid] - r.arrived) * 1e3 for r in reqs
-                         if r.uid in done_at and r.uid not in errors])
     snap = eng.metrics.snapshot()
-    pcts = (np.percentile(lat_ms, [50, 95, 99])
-            if lat_ms.size else np.zeros(3))
+    lat = hist.summary()                     # histogram-driven percentiles
     # Client-view accounting (the unified classifier shared with
     # throughput_compare): ok + failed + timed_out + dropped == submitted,
     # with the engine-counter cross-check in acct["consistent"].
@@ -370,11 +390,13 @@ def poisson_run(mix, count, rate, *, backend="ref", seed=0, window_s=0.005,
         "rejected": int(snap["rejected"]),
         "dropped": acct["dropped"],              # future never resolved
         "accounting": acct,
-        "throughput_rps": len(lat_ms) / t_total if t_total > 0 else 0.0,
-        "latency_ms": {"p50": float(pcts[0]), "p95": float(pcts[1]),
-                       "p99": float(pcts[2]),
-                       "mean": float(lat_ms.mean()) if lat_ms.size else 0.0,
-                       "max": float(lat_ms.max()) if lat_ms.size else 0.0},
+        "throughput_rps": hist.count / t_total if t_total > 0 else 0.0,
+        "latency_ms": {"p50": lat["p50_ms"], "p95": lat["p95_ms"],
+                       "p99": lat["p99_ms"], "mean": lat["mean_ms"],
+                       "max": lat["max_ms"]},
+        "latency_hist": hist.to_dict(),
+        "latency_exact_ms": sorted(v * 1e3 for v in exact_s),
+        "latency_bucket_ratio": hist.bucket_width_ratio(),
         "engine_metrics": snap,
     }
     # Gated column = per-request service interval from achieved THROUGHPUT
@@ -383,9 +405,11 @@ def poisson_run(mix, count, rate, *, backend="ref", seed=0, window_s=0.005,
     # ``derived`` where the regression gate never reads them.
     svc_us = (1e6 / result["throughput_rps"] if result["throughput_rps"]
               else 0.0)
+    lm = result["latency_ms"]
     rows = [row(f"serve_load/poisson_thpt/x{count}@r{rate:g}", svc_us,
-                f"p50={pcts[0]:.1f}ms;p95={pcts[1]:.1f}ms;p99={pcts[2]:.1f}ms;"
-                f"mean={result['latency_ms']['mean']:.1f}ms;"
+                f"p50={lm['p50']:.1f}ms;p95={lm['p95']:.1f}ms;"
+                f"p99={lm['p99']:.1f}ms;"
+                f"mean={lm['mean']:.1f}ms;"
                 f"thpt={result['throughput_rps']:.1f}rps;"
                 f"timed_out={result['timed_out']};"
                 f"fill={snap['batch_fill_ratio']:.2f}")]
@@ -466,6 +490,15 @@ def main(argv=None) -> None:
                     help="inject a seeded FaultPlan (scripted + 5%% dispatch "
                          "errors, 1%% NaN sigma) into the engines and assert "
                          "the fabric absorbed every fault (DESIGN.md §15)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve Prometheus-format engine metrics on "
+                         "127.0.0.1:PORT during the run (0 = ephemeral "
+                         "port); the gate scrapes /metrics afterwards and "
+                         "asserts the exposition is well-formed "
+                         "(DESIGN.md §16)")
+    ap.add_argument("--trace-jsonl", default="", metavar="PATH",
+                    help="export engine dispatch/retry/degraded spans to "
+                         "PATH as JSONL (repro.obs.Tracer; DESIGN.md §16)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -502,12 +535,22 @@ def main(argv=None) -> None:
                                dispatch_error_rate=0.05, nan_rate=0.01,
                                dispatch_errors_at=(nwarm,),
                                nan_at=(nwarm + 1,))
+    tracer = None
+    if args.trace_jsonl:
+        from repro.obs import Tracer
+        tracer = Tracer("serve_load", jsonl=args.trace_jsonl)
+    mserver = None
+    if args.metrics_port is not None:
+        from repro.obs import MetricsServer
+        mserver = MetricsServer(port=args.metrics_port)
+        print(f"# metrics endpoint: {mserver.url}", flush=True)
     t_rows, thr = throughput_compare(mix, count, backend="ref",
                                      seed=args.seed, autotune_cache=cache,
-                                     faults=faults_thr)
+                                     faults=faults_thr, tracer=tracer)
     p_rows, poi = poisson_run(mix, max(count // 2, 12), rate, backend="ref",
                               seed=args.seed, autotune_cache=cache,
-                              faults=faults_poi)
+                              faults=faults_poi, tracer=tracer,
+                              metrics_server=mserver)
     for line in t_rows + p_rows:
         print(line, flush=True)
 
@@ -585,6 +628,57 @@ def main(argv=None) -> None:
         # its sigma agrees with LAPACK to 1e-12 — the CI assertion that the
         # serve path actually exercises the D&C solver.
         failures.extend(_dc_tier_smoke(seed=args.seed))
+        # Histogram fidelity (DESIGN.md §16): the reported percentiles come
+        # from the fixed-log-bucket histogram; assert each lands within one
+        # bucket width (a factor of r) of the exact sample percentile.  The
+        # histogram's rank convention matches numpy's method="higher", so
+        # the only divergence is the bucket-midpoint quantization.
+        exact = np.asarray(poi.get("latency_exact_ms", []))
+        if exact.size:
+            ratio = poi["latency_bucket_ratio"]
+            for q in (50, 95, 99):
+                e = float(np.percentile(exact, q, method="higher"))
+                h = poi["latency_ms"][f"p{q}"]
+                if not (e / ratio <= h <= e * ratio):
+                    failures.append(
+                        f"histogram p{q}={h:.3f}ms off exact {e:.3f}ms by "
+                        f"more than one bucket width (r={ratio:.3f})")
+        else:
+            failures.append("no exact latency samples for the histogram "
+                            "fidelity check")
+    if mserver is not None:
+        # Scrape gate (DESIGN.md §16): the endpoint must answer, carry the
+        # serve series the run just produced, and every sample line must
+        # parse as ``name{labels} value`` — the exposition is hand-emitted,
+        # so CI asserts its shape, not just its existence.
+        import urllib.request
+        text = ""
+        try:
+            with urllib.request.urlopen(mserver.url, timeout=10) as resp:
+                text = resp.read().decode("utf-8")
+        except Exception as exc:                 # noqa: BLE001 — gate
+            failures.append(f"metrics scrape failed: {exc!r}")
+        for needed in ("repro_serve_requests_total",
+                       "repro_serve_latency_seconds_bucket",
+                       "repro_serve_queue_age_seconds_count",
+                       "repro_serve_health_status"):
+            if text and needed not in text:
+                failures.append(f"metrics exposition missing {needed}")
+        for line in text.splitlines():
+            if not line or line.startswith("#"):
+                continue
+            name_part, _, value_part = line.rpartition(" ")
+            try:
+                float(value_part)
+                ok_line = bool(name_part)
+            except ValueError:
+                ok_line = False
+            if not ok_line:
+                failures.append(f"malformed exposition line: {line!r}")
+                break
+        mserver.stop()
+    if tracer is not None:
+        print(f"# trace jsonl written to {args.trace_jsonl}", flush=True)
     if p99_budget and poi["latency_ms"]["p99"] > p99_budget:
         failures.append(f"p99 latency {poi['latency_ms']['p99']:.1f}ms "
                         f"> budget {p99_budget:g}ms")

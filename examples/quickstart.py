@@ -251,3 +251,29 @@ print(f"health: status={health['status']!r} "
 assert health["client_error_rate"] == 0.0
 assert snap10["retried"] + snap10["degraded"] >= 1
 print("OK")
+
+# --- 11. tracing: where does one svd_batched call spend its time? ------------
+# (DESIGN.md §16)  Pass a Tracer into any core.svd entry point and get a
+# fenced span tree: per-stage durations with jit compile time split out on
+# the first dispatch (JAX hides it inside the first call otherwise).  The
+# traced path runs the same jitted stages — sigma is bit-identical.
+from repro.obs import Tracer
+
+tr = Tracer("quickstart")
+mats11 = jnp.asarray(rng.standard_normal((4, 32, 32)))
+cfg11 = PipelineConfig.resolve(n=32, bw=4, backend="ref", dtype=np.float64)
+sig11 = svd_batched(mats11, cfg11, trace=tr)
+np.testing.assert_array_equal(np.asarray(sig11),
+                              np.asarray(svd_batched(mats11, cfg11)))
+
+(root11,) = tr.roots
+print(f"\nper-stage breakdown of one traced svd_batched call "
+      f"(compile split out):")
+print(tr.format(min_ms=0.01))
+stage_ms = {c.name: c.dur_s * 1e3 for c in root11.children}
+coverage = root11.total_child_seconds() / root11.dur_s
+print(f"stage spans cover {coverage:.1%} of the {root11.dur_s * 1e3:.1f} ms "
+      f"root ({', '.join(f'{k}={v:.1f}ms' for k, v in stage_ms.items())})")
+assert coverage >= 0.90                       # the §16 acceptance bar
+assert root11.find("stage1/compile")          # first dispatch: compile split
+print("OK")

@@ -75,7 +75,17 @@ def main(argv=None) -> int:
                     help="instead of the (tw, fuse, batch) grid, measure the "
                          "stage-3 bisect-vs-dc crossover up to the largest "
                          "--shapes n (DESIGN.md §14) and persist dc_n_min")
+    ap.add_argument("--trace-jsonl", default="", metavar="PATH",
+                    help="export measurement spans (warmup vs timed reps, "
+                         "compile attribution) to PATH as JSONL "
+                         "(repro.obs; DESIGN.md §16)")
     args = ap.parse_args(argv)
+
+    if args.trace_jsonl:
+        from repro import obs
+        obs.install(obs.Tracer("autotune", jsonl=args.trace_jsonl))
+        print(f"# tracing measurement spans to {args.trace_jsonl}",
+              flush=True)
 
     dtype = jnp.dtype(args.dtype)
     if dtype.itemsize == 8:

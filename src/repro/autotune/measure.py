@@ -19,24 +19,41 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 __all__ = ["measure_seconds", "banded_input", "time_stage2"]
 
 
-def measure_seconds(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+def measure_seconds(fn, *args, warmup: int = 1, iters: int = 3,
+                    label: str = "measure") -> float:
     """Median wall seconds of ``fn(*args)`` (jax-blocking).
 
     ``warmup`` calls are discarded (jit compilation + device spin-up);
     ``iters`` timed calls then give a median — robust to the one-off
     scheduling hiccups a mean would smear in.
+
+    With an ambient :class:`repro.obs.Tracer` active, every call emits a
+    span tree under ``label``: a ``warmup`` child per discarded call (the
+    FIRST warmup is where jit compilation lands, so its duration is the
+    compile-dominated one — the tracer attributes it ``compile="warmup0"``)
+    and a ``rep`` child per timed call, so a tuning run's trace shows
+    exactly what the reported median was computed from.
     """
-    for _ in range(max(warmup, 0)):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(max(iters, 1)):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    return sorted(ts)[len(ts) // 2]
+    with obs.span(label, warmup=warmup, iters=iters) as sp:
+        for i in range(max(warmup, 0)):
+            with obs.span("warmup", i=i) as w:
+                if i == 0:
+                    w.set(compile="warmup0")
+                jax.block_until_ready(fn(*args))
+        ts = []
+        for i in range(max(iters, 1)):
+            with obs.span("rep", i=i):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(*args))
+                ts.append(time.perf_counter() - t0)
+        med = sorted(ts)[len(ts) // 2]
+        sp.set(median_s=med)
+    return med
 
 
 def banded_input(n: int, bw: int, *, batch: int = 1, dtype=jnp.float32,
@@ -80,4 +97,6 @@ def time_stage2(n: int, bw: int, *, tw: int, fuse: int = 1, batch: int = 1,
                                           backend=backend, tape=tape,
                                           fuse=fuse)
 
-    return measure_seconds(call, warmup=warmup, iters=iters)
+    return measure_seconds(
+        call, warmup=warmup, iters=iters,
+        label=f"time_stage2/n{n}/bw{bw}/tw{tw}/fuse{fuse}/b{batch}")

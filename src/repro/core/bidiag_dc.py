@@ -801,10 +801,14 @@ def bidiag_dc_singular_values(d: jax.Array, e: jax.Array, *,
     a_leaf = a.reshape(nleaf, lm)
     b_leaf = jnp.concatenate([b, jnp.zeros(1, acc)]).reshape(
         nleaf, lm)[:, : lm - 1]
-    lam, f, el = jax.vmap(functools.partial(
-        _leaf_eigen, bisect_iters=bisect_iters,
-        inv_iters=inv_iters))(a_leaf, b_leaf)
+    with jax.named_scope("dc_leaves"):
+        lam, f, el = jax.vmap(functools.partial(
+            _leaf_eigen, bisect_iters=bisect_iters,
+            inv_iters=inv_iters))(a_leaf, b_leaf)
 
+    # Device-side attribution per merge level (DESIGN.md §16): this loop
+    # runs under jit, so host spans are meaningless here — named_scope
+    # labels each level's ops in `jax.profiler.trace` captures instead.
     for lev in range(levels):
         sz = lm << lev
         npair = big // (2 * sz)
@@ -813,10 +817,11 @@ def bidiag_dc_singular_values(d: jax.Array, e: jax.Array, *,
         lam2 = lam.reshape(npair, 2, sz)
         f2 = f.reshape(npair, 2, sz)
         l2 = el.reshape(npair, 2, sz)
-        lam, f, el = _merge_pair(
-            lam2[:, 0], f2[:, 0], l2[:, 0],
-            lam2[:, 1], f2[:, 1], l2[:, 1], rho_b,
-            newton_iters=newton_iters, need_rows=lev + 1 < levels)
+        with jax.named_scope(f"dc_merge_level_{lev}"):
+            lam, f, el = _merge_pair(
+                lam2[:, 0], f2[:, 0], l2[:, 0],
+                lam2[:, 1], f2[:, 1], l2[:, 1], rho_b,
+                newton_iters=newton_iters, need_rows=lev + 1 < levels)
 
     lam = lam.reshape(big)
     sig = jnp.abs(lam[big - n:][::-1])                   # top n, descending

@@ -53,6 +53,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import band as bandmod
 
 # Back-compat re-exports of the numpy oracles (historical home; the
@@ -237,9 +238,11 @@ def reduce_stage_packed(band: jax.Array, *, n: int, b_in: int, tw: int,
         # gather rolled dense windows: (B, G, H, W)
         win = bandp[:, d_gather[None], cols[:, None, :]]
         win = jnp.where(gather_valid[None, None], win, 0)
-        res = ops.chase_cycle(win.reshape(B * G, H, W), jnp.tile(is_first, B),
-                              b_in=b_in, tw=tw, backend=backend, config=config,
-                              with_tape=tape)
+        with jax.named_scope("chase_cycle"):
+            res = ops.chase_cycle(win.reshape(B * G, H, W),
+                                  jnp.tile(is_first, B), b_in=b_in, tw=tw,
+                                  backend=backend, config=config,
+                                  with_tape=tape)
         out = res[0] if tape else res
         out = out.reshape(B, G, H, W)
         out = jnp.where(active[None, :, None, None], out, win)
@@ -308,10 +311,12 @@ def _reduce_stage_superstep(band3: jax.Array, *, lead, n: int, b_in: int,
         p_safe = jnp.where(slot_on, p, dump + g_idx * WK).astype(jnp.int32)
         cols = p_safe[:, None] + jnp.arange(WK, dtype=jnp.int32)[None, :]
         blocks = bandp[:, rows, cols[:, None, :]]                  # (B, G, H, WK)
-        res = ops.chase_cycle(blocks.reshape(B * G, H, WK),
-                              jnp.tile(is_first, B), b_in=b_in, tw=tw,
-                              fuse=fuse, active=jnp.tile(act, (B, 1)),
-                              backend=backend, config=config, with_tape=tape)
+        with jax.named_scope("chase_supercycle"):
+            res = ops.chase_cycle(blocks.reshape(B * G, H, WK),
+                                  jnp.tile(is_first, B), b_in=b_in, tw=tw,
+                                  fuse=fuse, active=jnp.tile(act, (B, 1)),
+                                  backend=backend, config=config,
+                                  with_tape=tape)
         out = (res[0] if tape else res).reshape(B, G, H, WK)
         out = jnp.where(slot_on[None, :, None, None], out, blocks)
         bandp = bandp.at[:, rows, cols[:, None, :]].set(out)
@@ -390,16 +395,23 @@ def bidiagonalize_packed(band: jax.Array, *, n: int, bw: int, tw: int,
         start = tw_cur - twi
         if start != 0 or cur.shape[-2] != h_i:
             cur = jax.lax.slice_in_dim(cur, start, start + h_i, axis=-2)
-        if tape:
-            cur, tv, tt = reduce_stage_packed(cur, n=n, b_in=b_in, tw=twi,
-                                              backend=backend, config=config,
-                                              tape=True, fuse=fuse)
-            tapes.append(transforms.ChaseTape(n=n, b_in=b_in, tw=twi,
-                                              v=tv, tau=tt, fuse=fuse))
-        else:
-            cur = reduce_stage_packed(cur, n=n, b_in=b_in, tw=twi,
-                                      backend=backend, config=config,
-                                      fuse=fuse)
+        # Span per stage of the tile-width plan (DESIGN.md §16): no-op
+        # unless an ambient tracer is active AND we're outside jit tracing
+        # (inside `_three_stage` this whole loop is traced symbolically).
+        with obs.span("chase_stage", n=n, b_in=b_in, tw=twi, fuse=fuse,
+                      tape=tape) as sp:
+            if tape:
+                cur, tv, tt = obs.traced_jit_call(
+                    "chase_stage", reduce_stage_packed, cur, n=n, b_in=b_in,
+                    tw=twi, backend=backend, config=config, tape=True,
+                    fuse=fuse)
+                tapes.append(transforms.ChaseTape(n=n, b_in=b_in, tw=twi,
+                                                  v=tv, tau=tt, fuse=fuse))
+            else:
+                cur = obs.traced_jit_call(
+                    "chase_stage", reduce_stage_packed, cur, n=n, b_in=b_in,
+                    tw=twi, backend=backend, config=config, fuse=fuse)
+            sp.fence(cur)
         tw_cur = twi
     d = bandmod.band_extract_diag(cur, tw_cur, 0, n)
     e = bandmod.band_extract_diag(cur, tw_cur, 1, n)

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import obs
 from repro.core import svd as svdmod
 
 __all__ = ["batched_singular_values", "sharded_singular_values",
@@ -156,35 +157,46 @@ def sharded_pipeline_dispatch(mats: jax.Array, mesh: Mesh, *, config,
     out_specs = (spec, spec, spec) if compute_uv else spec
     fn = jax.shard_map(local, mesh=mesh, in_specs=(spec,),
                        out_specs=out_specs, check_vma=False)
-    try:
-        out = fn(mats)
-    except Exception:                            # noqa: BLE001 — mesh down
-        # Real failure path: the sharded dispatch is gone as a unit.
-        # Re-dispatch the whole batch unsharded (same pipeline body).
-        if on_shard_retry is not None:
-            on_shard_retry(shards)
-        out = local(mats)
-    else:
-        lost = faults.lost_shards(shards) if faults is not None else []
-        if lost:
-            per = mats.shape[0] // shards
-            parts = list(out) if compute_uv else [out]
-            for j in sorted(set(lost)):
-                sl = slice(j * per, (j + 1) * per)
-                # Void the lost shard's slice (its device's results are
-                # gone), then recompute it through the SAME compiled
-                # sharded program: tile the slice across the mesh so
-                # shard j sees exactly the bytes it saw in the clean run
-                # -> bitwise-identical recovery.
-                reps = (shards,) + (1,) * (mats.ndim - 1)
-                rout = fn(jnp.tile(mats[sl], reps))
-                rparts = list(rout) if compute_uv else [rout]
-                for i, (arr, rarr) in enumerate(zip(parts, rparts)):
-                    voided = arr.at[sl].set(jnp.nan)
-                    parts[i] = voided.at[sl].set(rarr[sl])
-                if on_shard_retry is not None:
-                    on_shard_retry(1)
-            out = tuple(parts) if compute_uv else parts[0]
+    # Host span for the whole mesh dispatch (DESIGN.md §16); the shard_map
+    # body itself runs under jit tracing, where spans no-op by design.
+    with obs.span("sharded_dispatch", shards=shards, pad=pad, batch=int(b0),
+                  n=int(mats.shape[-1]), banded=banded,
+                  compute_uv=compute_uv) as dsp:
+        try:
+            out = fn(mats)
+        except Exception:                        # noqa: BLE001 — mesh down
+            # Real failure path: the sharded dispatch is gone as a unit.
+            # Re-dispatch the whole batch unsharded (same pipeline body).
+            if on_shard_retry is not None:
+                on_shard_retry(shards)
+            with obs.span("sharded_fallback_unsharded", shards=shards) as sp:
+                out = local(mats)
+                sp.fence(out)
+            dsp.set(fallback="unsharded")
+        else:
+            lost = faults.lost_shards(shards) if faults is not None else []
+            if lost:
+                per = mats.shape[0] // shards
+                parts = list(out) if compute_uv else [out]
+                for j in sorted(set(lost)):
+                    sl = slice(j * per, (j + 1) * per)
+                    # Void the lost shard's slice (its device's results are
+                    # gone), then recompute it through the SAME compiled
+                    # sharded program: tile the slice across the mesh so
+                    # shard j sees exactly the bytes it saw in the clean run
+                    # -> bitwise-identical recovery.
+                    reps = (shards,) + (1,) * (mats.ndim - 1)
+                    with obs.span("shard_retry", shard=j) as sp:
+                        rout = fn(jnp.tile(mats[sl], reps))
+                        sp.fence(rout)
+                    rparts = list(rout) if compute_uv else [rout]
+                    for i, (arr, rarr) in enumerate(zip(parts, rparts)):
+                        voided = arr.at[sl].set(jnp.nan)
+                        parts[i] = voided.at[sl].set(rarr[sl])
+                    if on_shard_retry is not None:
+                        on_shard_retry(1)
+                out = tuple(parts) if compute_uv else parts[0]
+        dsp.fence(out)
     if compute_uv:
         u, sig, vt = out
         return u[:b0], sig[:b0], vt[:b0]

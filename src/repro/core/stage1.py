@@ -132,7 +132,9 @@ def _band_reduce_2d(a: jax.Array, *, nb: int, backend: str,
 
         v0 = jnp.zeros((big, nb), acc)
         t0 = jnp.zeros((nb,), acc)
-        a, v_blk, taus = jax.lax.fori_loop(0, nb, qr_reflector, (a, v0, t0))
+        with jax.named_scope("stage1_qr_panel"):
+            a, v_blk, taus = jax.lax.fori_loop(0, nb, qr_reflector,
+                                               (a, v0, t0))
         t = wy_t_factor(v_blk, taus)
         # blocked trailing update (Q^T = I - V T^T V^T) on columns >= c0+nb
         if backend == "pallas":
@@ -166,7 +168,9 @@ def _band_reduce_2d(a: jax.Array, *, nb: int, backend: str,
             a = jax.lax.dynamic_update_slice(a, stripe, (c0, 0))
             return a, v_blk.at[:, j].set(v), taus.at[j].set(tau)
 
-        a, vr_blk, taus_r = jax.lax.fori_loop(0, nb, lq_reflector, (a, v0, t0))
+        with jax.named_scope("stage1_lq_panel"):
+            a, vr_blk, taus_r = jax.lax.fori_loop(0, nb, lq_reflector,
+                                                  (a, v0, t0))
         tr = wy_t_factor(vr_blk, taus_r)
         # blocked trailing update from the right on rows >= c0+nb
         w = a @ vr_blk

@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import bulge_chasing as bc
 from repro.core import stage1 as s1
 from repro.core import bidiag_dc as s3dc
@@ -161,6 +162,79 @@ def _stage3_svd(d: jax.Array, e: jax.Array, cfg: tuning.PipelineConfig):
     return s3.bidiag_svd(d, e)
 
 
+def _resolve_tracer(trace):
+    """The tracer for this call: an explicit ``trace=`` wins, else the
+    ambient one (``repro.obs.current()``), else None.  Host spans are only
+    meaningful outside jax tracing (DESIGN.md §16)."""
+    tr = trace if trace is not None else obs.current()
+    if tr is None:
+        return None
+    try:
+        if not jax.core.trace_state_clean():
+            return None
+    except Exception:
+        pass
+    return tr
+
+
+def _span_attrs(a, cfg: tuning.PipelineConfig, **extra) -> dict:
+    lead = a.shape[:-2]
+    batch = 1
+    for dim in lead:
+        batch *= int(dim)
+    return dict(n=int(a.shape[-1]), bw=cfg.bw, tw=cfg.tw, fuse=cfg.fuse,
+                dtype=str(a.dtype), backend=cfg.backend, batch=batch,
+                **extra)
+
+
+def _stage3_values_traced(d: jax.Array, e: jax.Array,
+                          cfg: tuning.PipelineConfig) -> jax.Array:
+    """Values-mode stage 3 under an ambient tracer: same solver dispatch as
+    :func:`_stage3_values`, but inside a ``stage3`` span with compile/run
+    split and device fencing."""
+    solver = cfg.stage3_for(d.shape[-1])
+    with obs.span("stage3", solver=solver, n=int(d.shape[-1])) as sp:
+        if solver == "dc":
+            sig = obs.traced_jit_call("stage3_dc",
+                                      s3dc.bidiag_dc_singular_values, d, e,
+                                      leaf_n=cfg.dc_leaf_n)
+        else:
+            sig = obs.traced_jit_call("stage3_bisect",
+                                      s3.bidiag_singular_values, d, e)
+        sp.fence(sig)
+    return sig
+
+
+def _stage3_svd_traced(d: jax.Array, e: jax.Array,
+                       cfg: tuning.PipelineConfig):
+    solver = cfg.stage3_for(d.shape[-1])
+    with obs.span("stage3", solver=solver, n=int(d.shape[-1]),
+                  compute_uv=True) as sp:
+        if solver == "dc":
+            out = obs.traced_jit_call("stage3_dc_svd", s3dc.bidiag_dc_svd,
+                                      d, e, leaf_n=cfg.dc_leaf_n)
+        else:
+            out = obs.traced_jit_call("stage3_svd", s3.bidiag_svd, d, e)
+        sp.fence(out)
+    return out
+
+
+def _three_stage_traced(a: jax.Array, cfg: tuning.PipelineConfig
+                        ) -> jax.Array:
+    """Traced values path: the SAME per-stage jitted functions
+    ``_three_stage`` composes, run eagerly so each stage gets its own
+    fenced span (and its own compile-vs-run attribution).  Sigma is
+    unchanged — the stage boundaries are already jit boundaries inside
+    ``_three_stage``; only the outer fusion wrapper is dropped."""
+    with obs.span("stage1", **_span_attrs(a, cfg)) as sp:
+        banded = sp.fence(obs.traced_jit_call(
+            "stage1", s1.band_reduce, a, nb=cfg.bw, config=cfg))
+    with obs.span("stage2", **_span_attrs(a, cfg)) as sp:
+        d, e = bc.bidiagonalize(banded, bw=cfg.bw, tw=cfg.tw, config=cfg)
+        sp.fence((d, e))
+    return _stage3_values_traced(d, e, cfg)
+
+
 def _fused_path(a: jax.Array, cfg: tuning.PipelineConfig, *,
                 compute_uv: bool):
     """DESIGN.md §13: the one-dispatch fused small-n tier.
@@ -201,17 +275,35 @@ def bidiagonal_of(a: jax.Array, *, bw: int | None = None,
 def banded_singular_values(a: jax.Array, *, bw: int | None = None,
                            tw: int | None = None, backend: str = "auto",
                            config: tuning.PipelineConfig | None = None,
-                           check: bool = False) -> jax.Array:
+                           check: bool = False, trace=None) -> jax.Array:
     """Singular values of upper-banded (..., n, n) (stages 2+3), descending.
 
     ``check=True`` runs the post-solve health guard (:func:`validate_sigma`,
     DESIGN.md §15) on the result — raising :class:`NumericalFault` instead
     of returning garbage when a chase went numerically bad.  It forces a
     host sync, so leave it off inside jit-hot loops.
+
+    ``trace=`` takes a :class:`repro.obs.Tracer` (DESIGN.md §16): stages
+    run under fenced spans with per-stage compile/run attribution.  An
+    ambient tracer (``obs.activated``/``obs.install``) traces too.
     """
     cfg = tuning.PipelineConfig.of(config, bw=bw, tw=tw, backend=backend,
                                    dtype=a.dtype, n=a.shape[-1])
-    if cfg.backend == "fused_small":
+    tr = _resolve_tracer(trace)
+    if tr is not None:
+        with obs.activated(tr), tr.span(
+                "banded_singular_values", **_span_attrs(a, cfg)) as root:
+            if cfg.backend == "fused_small":
+                with obs.span("fused") as sp:
+                    sig = sp.fence(_fused_path(a, cfg, compute_uv=False))
+            else:
+                with obs.span("stage2", **_span_attrs(a, cfg)) as sp:
+                    d, e = bc.bidiagonalize(a, bw=cfg.bw, tw=cfg.tw,
+                                            config=cfg)
+                    sp.fence((d, e))
+                sig = _stage3_values_traced(d, e, cfg)
+            root.fence(sig)
+    elif cfg.backend == "fused_small":
         sig = _fused_path(a, cfg, compute_uv=False)
     else:
         d, e = bidiagonal_of(a, config=cfg)
@@ -231,7 +323,7 @@ def _three_stage(a: jax.Array, *, config: tuning.PipelineConfig) -> jax.Array:
 def singular_values(a: jax.Array, *, bw: int | None = None,
                     tw: int | None = None, backend: str = "auto",
                     config: tuning.PipelineConfig | None = None,
-                    check: bool = False) -> jax.Array:
+                    check: bool = False, trace=None) -> jax.Array:
     """All singular values of dense (..., n, n), descending (3 stages).
 
     ``bw`` defaults to 32 when neither it nor ``config`` is given; passing a
@@ -243,10 +335,26 @@ def singular_values(a: jax.Array, *, bw: int | None = None,
     ``check=True`` validates the result post-solve (finite, non-negative,
     descending — :func:`validate_sigma`) and raises
     :class:`NumericalFault` on violation (DESIGN.md §15).
+
+    ``trace=`` (or an ambient ``repro.obs`` tracer) records a fenced span
+    tree — stage1/stage2/stage3 children under one root, compile time
+    split out on first dispatch (DESIGN.md §16).  The traced path runs
+    the same per-stage jitted stages eagerly instead of the one fused
+    ``_three_stage`` jit, so each stage is individually attributable.
     """
     cfg = tuning.PipelineConfig.of(config, bw=bw, tw=tw, backend=backend,
                                    dtype=a.dtype, n=a.shape[-1])
-    if cfg.backend == "fused_small":
+    tr = _resolve_tracer(trace)
+    if tr is not None:
+        with obs.activated(tr), tr.span(
+                "singular_values", **_span_attrs(a, cfg)) as root:
+            if cfg.backend == "fused_small":
+                with obs.span("fused") as sp:
+                    sig = sp.fence(_fused_path(a, cfg, compute_uv=False))
+            else:
+                sig = _three_stage_traced(a, cfg)
+            root.fence(sig)
+    elif cfg.backend == "fused_small":
         sig = _fused_path(a, cfg, compute_uv=False)
     else:
         sig = _three_stage(a, config=cfg)
@@ -258,7 +366,7 @@ def singular_values(a: jax.Array, *, bw: int | None = None,
 def batched_singular_values(mats: jax.Array, *, bw: int | None = None,
                             tw: int | None = None, backend: str = "auto",
                             config: tuning.PipelineConfig | None = None,
-                            check: bool = False) -> jax.Array:
+                            check: bool = False, trace=None) -> jax.Array:
     """Batch-native three-stage pipeline: (B, n, n) -> (B, n) descending.
 
     Unlike a vmapped loop, the B chases share one wavefront: every global
@@ -267,12 +375,12 @@ def batched_singular_values(mats: jax.Array, *, bw: int | None = None,
     """
     assert mats.ndim == 3, f"expected stacked (B, n, n), got {mats.shape}"
     return singular_values(mats, bw=bw, tw=tw, backend=backend, config=config,
-                           check=check)
+                           check=check, trace=trace)
 
 
 def svd_batched(mats: jax.Array,
                 config: tuning.PipelineConfig | None = None, *,
-                compute_uv: bool | None = None, **overrides):
+                compute_uv: bool | None = None, trace=None, **overrides):
     """Config-first batched entry point: ``svd_batched(stacked, cfg)``.
 
     Sugar over :func:`batched_singular_values` for callers that already hold
@@ -286,8 +394,10 @@ def svd_batched(mats: jax.Array,
         compute_uv = config.compute_uv if config is not None else False
     if compute_uv:
         assert mats.ndim == 3, f"expected stacked (B, n, n), got {mats.shape}"
-        return svd(mats, config=config, compute_uv=True, **overrides)
-    return batched_singular_values(mats, config=config, **overrides)
+        return svd(mats, config=config, compute_uv=True, trace=trace,
+                   **overrides)
+    return batched_singular_values(mats, config=config, trace=trace,
+                                   **overrides)
 
 
 # ---------------------------------------------------------------------------
@@ -310,17 +420,27 @@ def _uv_pipeline(a: jax.Array, *, config: tuning.PipelineConfig,
         s1_tape = None
         band_in = a
     else:
-        band_in, s1_tape = s1.band_reduce(a, nb=config.bw, config=config,
-                                          tape=True)
-    d, e, chase_tapes = bc.bidiagonalize(band_in, bw=config.bw, tw=config.tw,
-                                         config=config, tape=True)
-    u2, vt2 = transforms.accumulate_transforms(
-        n, s1_tape=s1_tape, chase_tapes=chase_tapes, lead=lead,
-        dtype=a.dtype, config=config)
-    ub, sig, vtb = _stage3_svd(d, e, config)
+        with obs.span("stage1", **_span_attrs(a, config, tape=True)) as sp:
+            band_in, s1_tape = obs.traced_jit_call(
+                "stage1_tape", s1.band_reduce, a, nb=config.bw,
+                config=config, tape=True)
+            sp.fence((band_in, s1_tape))
+    with obs.span("stage2", **_span_attrs(a, config, tape=True)) as sp:
+        d, e, chase_tapes = bc.bidiagonalize(band_in, bw=config.bw,
+                                             tw=config.tw, config=config,
+                                             tape=True)
+        sp.fence((d, e))
+    with obs.span("replay", n=int(n)) as sp:
+        u2, vt2 = transforms.accumulate_transforms(
+            n, s1_tape=s1_tape, chase_tapes=chase_tapes, lead=lead,
+            dtype=a.dtype, config=config)
+        sp.fence((u2, vt2))
+    ub, sig, vtb = _stage3_svd_traced(d, e, config)
     # A = U2 B V2^T and B = Ub S Vb^T  =>  U = U2 Ub, V^T = Vb^T V2^T.
-    u = jnp.matmul(u2, ub)
-    vt = jnp.matmul(vtb, vt2)
+    with obs.span("compose") as sp:
+        u = jnp.matmul(u2, ub)
+        vt = jnp.matmul(vtb, vt2)
+        sp.fence((u, vt))
     return u, sig, vt
 
 
@@ -339,7 +459,7 @@ def _checked_uv(a, out, *, check: bool):
 
 def svd(a: jax.Array, *, bw: int | None = None, tw: int | None = None,
         backend: str = "auto", config: tuning.PipelineConfig | None = None,
-        compute_uv: bool = True, check: bool = False):
+        compute_uv: bool = True, check: bool = False, trace=None):
     """Full SVD of dense (..., n, n): ``(U, sigma, V^T)``, sigma descending.
 
     ``compute_uv=False`` degrades to :func:`singular_values` (and the sigma
@@ -354,19 +474,22 @@ def svd(a: jax.Array, *, bw: int | None = None, tw: int | None = None,
     """
     cfg = tuning.PipelineConfig.of(config, bw=bw, tw=tw, backend=backend,
                                    dtype=a.dtype, n=a.shape[-1])
+    if not compute_uv:
+        return singular_values(a, config=cfg, check=check, trace=trace)
+    tr = _resolve_tracer(trace)
+    if tr is not None:
+        with obs.activated(tr), tr.span(
+                "svd", **_span_attrs(a, cfg, compute_uv=True)) as root:
+            if cfg.backend == "fused_small":
+                with obs.span("fused") as sp:
+                    out = sp.fence(_fused_path(a, cfg, compute_uv=True))
+            else:
+                out = _uv_pipeline(a, config=cfg, banded=False)
+            root.fence(out)
+        return _checked_uv(a, out, check=check)
     if cfg.backend == "fused_small":
-        if not compute_uv:
-            sig = _fused_path(a, cfg, compute_uv=False)
-            if check:
-                validate_sigma(sig)
-            return sig
         return _checked_uv(a, _fused_path(a, cfg, compute_uv=True),
                            check=check)
-    if not compute_uv:
-        sig = _three_stage(a, config=cfg)
-        if check:
-            validate_sigma(sig)
-        return sig
     return _checked_uv(a, _uv_pipeline(a, config=cfg, banded=False),
                        check=check)
 
@@ -374,20 +497,27 @@ def svd(a: jax.Array, *, bw: int | None = None, tw: int | None = None,
 def banded_svd(a: jax.Array, *, bw: int | None = None, tw: int | None = None,
                backend: str = "auto",
                config: tuning.PipelineConfig | None = None,
-               compute_uv: bool = True, check: bool = False):
+               compute_uv: bool = True, check: bool = False, trace=None):
     """Full SVD of upper-banded (..., n, n) (stages 2+3 only); ``check=``
-    as in :func:`svd`."""
+    as in :func:`svd`, ``trace=`` as in :func:`singular_values`."""
     cfg = tuning.PipelineConfig.of(config, bw=bw, tw=tw, backend=backend,
                                    dtype=a.dtype, n=a.shape[-1])
+    if not compute_uv:
+        return banded_singular_values(a, config=cfg, check=check,
+                                      trace=trace)
+    tr = _resolve_tracer(trace)
+    if tr is not None:
+        with obs.activated(tr), tr.span(
+                "banded_svd", **_span_attrs(a, cfg, compute_uv=True)) as root:
+            if cfg.backend == "fused_small":
+                with obs.span("fused") as sp:
+                    out = sp.fence(_fused_path(a, cfg, compute_uv=True))
+            else:
+                out = _uv_pipeline(a, config=cfg, banded=True)
+            root.fence(out)
+        return _checked_uv(a, out, check=check)
     if cfg.backend == "fused_small":
-        if not compute_uv:
-            sig = _fused_path(a, cfg, compute_uv=False)
-            if check:
-                validate_sigma(sig)
-            return sig
         return _checked_uv(a, _fused_path(a, cfg, compute_uv=True),
                            check=check)
-    if not compute_uv:
-        return banded_singular_values(a, config=cfg, check=check)
     return _checked_uv(a, _uv_pipeline(a, config=cfg, banded=True),
                        check=check)

@@ -33,6 +33,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import bulge_chasing as bc
 
 __all__ = ["ChaseTape", "accumulate_transforms", "replay_stage1",
@@ -167,12 +168,19 @@ def accumulate_transforms(n: int, *, s1_tape=None, chase_tapes=(),
     if s1_tape is not None:
         flat = tuple(x.reshape((b,) + x.shape[len(lead):]).astype(acc)
                      for x in s1_tape)
-        ut, vt = replay_stage1(ut, vt, flat, config=config)
+        with obs.span("replay_stage1", n=int(n), batch=b) as sp:
+            ut, vt = obs.traced_jit_call("replay_stage1", replay_stage1,
+                                         ut, vt, flat, config=config)
+            sp.fence((ut, vt))
     for tape in chase_tapes:
         tv = tape.v.reshape((b,) + tape.v.shape[len(lead):]).astype(acc)
         tt = tape.tau.reshape((b,) + tape.tau.shape[len(lead):]).astype(acc)
-        ut, vt = replay_chase(ut, vt, tv, tt, n=tape.n, b_in=tape.b_in,
-                              tw=tape.tw, config=config, fuse=tape.fuse)
+        with obs.span("replay_chase", n=tape.n, b_in=tape.b_in, tw=tape.tw,
+                      fuse=tape.fuse) as sp:
+            ut, vt = obs.traced_jit_call(
+                "replay_chase", replay_chase, ut, vt, tv, tt, n=tape.n,
+                b_in=tape.b_in, tw=tape.tw, config=config, fuse=tape.fuse)
+            sp.fence((ut, vt))
     u = jnp.swapaxes(ut, -1, -2)
     out_dt = jnp.dtype(dtype)
     return (u.reshape(lead + (n, n)).astype(out_dt),

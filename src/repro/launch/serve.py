@@ -46,6 +46,10 @@ def main(argv=None):
     ap.add_argument("--autotune", action="store_true",
                     help="[--svd] per-bucket tuned-config cache (DESIGN.md "
                          "§11)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="[--svd] serve Prometheus-format engine metrics at "
+                         "127.0.0.1:PORT/metrics for the lifetime of the "
+                         "run (0 = ephemeral port; DESIGN.md §16)")
     args = ap.parse_args(argv)
     if args.svd:
         return main_svd(args)
@@ -85,6 +89,12 @@ def main_svd(args):
     eng = AsyncSVDEngine(
         backend="auto", autotune=args.autotune, mesh=mesh,
         default_timeout_s=(args.timeout_ms / 1e3 or None))
+    mserver = None
+    if args.metrics_port is not None:
+        from repro.obs import MetricsServer
+        mserver = MetricsServer(port=args.metrics_port)
+        mserver.register("svd", eng.metrics)
+        print(f"metrics endpoint: {mserver.url}")
     # Warm the bucket (one compile) outside the timed window — never under
     # the engine's default deadline (compiles take seconds).
     eng.submit(SVDRequest(uid=-1, matrix=rng.standard_normal((n, n)),
@@ -137,6 +147,8 @@ def main_svd(args):
     health = eng.metrics.health()
     print("health:", {k: round(v, 4) if isinstance(v, float) else v
                       for k, v in health.items()})
+    if mserver is not None:
+        mserver.stop()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,44 @@
+"""repro.obs — pipeline observability (DESIGN.md §16).
+
+Three pieces, importable from this package root:
+
+* :class:`Tracer` / :class:`Span` — thread-safe structured span tracing
+  with ``block_until_ready`` fencing and compile-vs-run attribution
+  (``trace.py``).  Ambient-tracer helpers: :func:`current`,
+  :func:`activated`, :func:`install`, :func:`span`,
+  :func:`traced_jit_call`.
+* :class:`StreamingHistogram` — mergeable fixed-log-bucket latency
+  histograms with bounded memory (``hist.py``).
+* :class:`MetricsServer` / :func:`render_serve_metrics` — Prometheus
+  text exposition over stdlib http.server (``prom.py``); JSONL span
+  export/round-trip in ``export.py``.
+"""
+
+from .export import JsonlExporter, SpanRecord, load_jsonl
+from .hist import StreamingHistogram
+from .prom import MetricsServer, render_serve_metrics
+from .trace import (
+    Span,
+    Tracer,
+    activated,
+    current,
+    install,
+    span,
+    traced_jit_call,
+)
+
+__all__ = [
+    "JsonlExporter",
+    "SpanRecord",
+    "load_jsonl",
+    "StreamingHistogram",
+    "MetricsServer",
+    "render_serve_metrics",
+    "Span",
+    "Tracer",
+    "activated",
+    "current",
+    "install",
+    "span",
+    "traced_jit_call",
+]

@@ -17,9 +17,10 @@ from repro.serve.engine import (Engine, Request, ServeConfig,
 from repro.serve.faults import (BucketQuarantine, FaultPlan,
                                 InjectedDeviceLoss, InjectedDispatchError,
                                 InjectedFault, RetryPolicy)
-from repro.serve.metrics import ServeMetrics
+from repro.serve.metrics import ServeMetrics, bucket_key_str
 
 __all__ = ["Engine", "Request", "ServeConfig", "SVDEngine", "SVDRequest",
            "AsyncSVDEngine", "QueueFullError", "ServeMetrics",
+           "bucket_key_str",
            "FaultPlan", "RetryPolicy", "BucketQuarantine", "NumericalFault",
            "InjectedFault", "InjectedDispatchError", "InjectedDeviceLoss"]

@@ -90,12 +90,13 @@ class AsyncSVDEngine(SVDEngine):
                  max_pending: int = 4096, finished_history: int = 1024,
                  fused_n_max: int | None = None,
                  dc_n_min: int | None = None,
-                 faults=None, retry=None, residual_check: bool = False):
+                 faults=None, retry=None, residual_check: bool = False,
+                 tracer=None):
         super().__init__(config, backend=backend, max_batch=max_batch,
                          autotune=autotune, autotune_cache=autotune_cache,
                          mesh=mesh, fused_n_max=fused_n_max,
                          dc_n_min=dc_n_min, faults=faults, retry=retry,
-                         residual_check=residual_check)
+                         residual_check=residual_check, tracer=tracer)
         self.finished = collections.deque(maxlen=int(finished_history))
         self.batch_window_s = float(batch_window_s)
         self.default_timeout_s = default_timeout_s
@@ -268,4 +269,10 @@ class AsyncSVDEngine(SVDEngine):
             for r, exc in to_fail:
                 self._finish(r, error=exc)
             if reqs:
+                # Async queue age (admission -> dispatch) is observed here —
+                # the inherited step() path is unused on a started engine.
+                now = time.monotonic()
+                for r in reqs:
+                    if r.arrived is not None:
+                        self.metrics.observe_queue_age(now - r.arrived)
                 self._serve_batch(key, cfg, reqs)

@@ -34,8 +34,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.serve.faults import BucketQuarantine, RetryPolicy
-from repro.serve.metrics import ServeMetrics
+from repro.serve.metrics import ServeMetrics, bucket_key_str
 
 __all__ = ["Request", "ServeConfig", "Engine",
            "SVDRequest", "SVDEngine"]
@@ -271,7 +272,7 @@ class SVDEngine:
                  fused_n_max: int | None = None,
                  dc_n_min: int | None = None,
                  faults=None, retry: RetryPolicy | None = None,
-                 residual_check: bool = False):
+                 residual_check: bool = False, tracer=None):
         from repro.core import tuning
         if config is None:
             config = tuning.PipelineConfig.resolve(backend=backend)
@@ -293,11 +294,25 @@ class SVDEngine:
         self.finished: list[SVDRequest] = []
         self.calls = 0                           # batched pipeline invocations
         self.metrics = ServeMetrics()
+        self.tracer = tracer                     # obs.Tracer or None, §16
         self._cfg_memo: dict[tuple, object] = {}  # bucket key -> resolved cfg
         self._degraded_memo: dict[tuple, object] = {}  # key -> ref-tier cfg
 
+    def _resolve_tracer(self):
+        return self.tracer if self.tracer is not None else obs.current()
+
+    def _span(self, name: str, **attrs):
+        """A span on the engine's tracer (explicit or ambient) — the
+        shared no-op span when neither exists (DESIGN.md §16)."""
+        tr = self._resolve_tracer()
+        if tr is None:
+            return obs.span(name, **attrs)       # -> null span
+        return tr.span(name, **attrs)
+
     def submit(self, req: SVDRequest) -> None:
         assert req.matrix.ndim == 2 and req.matrix.shape[0] == req.matrix.shape[1]
+        if req.arrived is None:
+            req.arrived = time.monotonic()       # queue-age/latency clock, §16
         key = req.key()
         self.metrics.add(submitted=1,
                          bucket_hits=int(key in self._cfg_memo
@@ -438,7 +453,8 @@ class SVDEngine:
         self.metrics.set_queue_depth(self.pending())
         return reqs
 
-    def _finish(self, req: SVDRequest, error: Exception | None = None) -> None:
+    def _finish(self, req: SVDRequest, error: Exception | None = None, *,
+                tier: str | None = None) -> None:
         """Complete one request exactly once: results already on it, or
         ``error``; resolve its future (async callers) either way.
 
@@ -447,7 +463,12 @@ class SVDEngine:
         timeout to the caller (nobody is waiting anymore) and counts in
         ``timed_out`` — its results stay on the request object for
         observability (the future resolves with :class:`TimeoutError`,
-        ``req.sigma`` keeps the late answer)."""
+        ``req.sigma`` keeps the late answer).
+
+        Successful completions feed the per-tier and per-bucket latency
+        histograms (DESIGN.md §16) with the CLIENT-view latency
+        (``submit`` -> completion); ``tier`` attributes it (falling back
+        to the bucket's resolved tier when the caller doesn't know)."""
         if (error is None and req.deadline is not None
                 and time.monotonic() > req.deadline):
             error = TimeoutError(
@@ -459,6 +480,11 @@ class SVDEngine:
         self.finished.append(req)
         if error is None:
             self.metrics.add(completed=1)
+            if req.arrived is not None:
+                key = req.key()
+                self.metrics.observe_latency(
+                    tier or self.metrics.tier_of_bucket(key), key,
+                    time.monotonic() - req.arrived)
         elif isinstance(error, TimeoutError):
             self.metrics.add(timed_out=1)        # serving failure, not pipeline
         else:
@@ -485,6 +511,22 @@ class SVDEngine:
         the plan may delay/raise before dispatch and corrupt the sigma
         block after it.  Every result — injected or not — then passes the
         numerical-health guard, raising ``NumericalFault`` on garbage."""
+        tr = self._resolve_tracer()
+        if tr is None:
+            return self._pipeline_call_inner(key, cfg, mats, tier=tier,
+                                             inject=inject)
+        # Dispatch span (DESIGN.md §16): activating the tracer lets the
+        # pipeline's own stage spans nest under this one — the engine
+        # needs no per-call trace= plumbing into core.
+        with obs.activated(tr), tr.span(
+                "serve/dispatch", bucket=bucket_key_str(key),
+                tier=tier or self._tier_of(cfg, key[0]), n=key[0],
+                batch=len(mats), backend=cfg.backend, inject=inject):
+            return self._pipeline_call_inner(key, cfg, mats, tier=tier,
+                                             inject=inject)
+
+    def _pipeline_call_inner(self, key: tuple, cfg, mats: list[np.ndarray],
+                             *, tier: str | None = None, inject: bool = True):
         from repro.core import svd as svdmod
         n, _bw, dtype, banded, compute_uv = key
         faults = self.faults if inject else None
@@ -568,7 +610,8 @@ class SVDEngine:
         if self.quarantine.record_success(key):
             self.metrics.set_bucket_quarantined(key, False)
 
-    def _deliver(self, key: tuple, reqs: list[SVDRequest], sig, u, vt) -> None:
+    def _deliver(self, key: tuple, reqs: list[SVDRequest], sig, u, vt,
+                 tier: str | None = None) -> None:
         """Copy one dispatch's results onto its requests and complete them
         in submission (FIFO) order."""
         _n, _bw, _dtype, _banded, compute_uv = key
@@ -576,7 +619,7 @@ class SVDEngine:
             r.sigma = sig[i]
             if compute_uv:
                 r.u, r.vt = u[i], vt[i]
-            self._finish(r)
+            self._finish(r, tier=tier)
 
     def _serve_degraded(self, key: tuple, reqs: list[SVDRequest],
                         cause: Exception | None) -> int:
@@ -586,19 +629,22 @@ class SVDEngine:
         guard; if even the ref tier fails, the request finally surfaces
         ``cause`` (the primary-path error — more actionable than the
         fallback's own)."""
-        try:
-            dcfg = self._degraded_cfg(key)
-            sig, u, vt = self._pipeline_call(key, dcfg,
-                                             [r.matrix for r in reqs],
-                                             tier="degraded-ref",
-                                             inject=False)
-        except Exception as exc:                 # noqa: BLE001 — last resort
-            for r in reqs:
-                self._finish(r, error=cause if cause is not None else exc)
+        with self._span("serve/degraded", bucket=bucket_key_str(key),
+                        batch=len(reqs),
+                        cause=repr(cause) if cause is not None else None):
+            try:
+                dcfg = self._degraded_cfg(key)
+                sig, u, vt = self._pipeline_call(key, dcfg,
+                                                 [r.matrix for r in reqs],
+                                                 tier="degraded-ref",
+                                                 inject=False)
+            except Exception as exc:             # noqa: BLE001 — last resort
+                for r in reqs:
+                    self._finish(r, error=cause if cause is not None else exc)
+                return len(reqs)
+            self.metrics.add(degraded=len(reqs))
+            self._deliver(key, reqs, sig, u, vt, tier="degraded-ref")
             return len(reqs)
-        self.metrics.add(degraded=len(reqs))
-        self._deliver(key, reqs, sig, u, vt)
-        return len(reqs)
 
     def _retry_request(self, key: tuple, cfg, req: SVDRequest,
                        exc: Exception) -> int:
@@ -621,7 +667,9 @@ class SVDEngine:
                 break
             self.metrics.add(retried=1)
             try:
-                sig, u, vt = self._pipeline_call(key, cfg, [req.matrix])
+                with self._span("serve/retry", bucket=bucket_key_str(key),
+                                attempt=failures, backoff_s=delay):
+                    sig, u, vt = self._pipeline_call(key, cfg, [req.matrix])
             except Exception as exc2:            # noqa: BLE001 — ladder
                 exc = exc2
                 failures += 1
@@ -672,7 +720,15 @@ class SVDEngine:
             for r in self._pop(key, len(self.buckets[key])):
                 self._finish(r, error=exc)
             return 0
-        return self._serve_batch(key, cfg, self._pop(key, cfg.max_batch))
+        reqs = self._pop(key, cfg.max_batch)
+        # Queue age is observed exactly once per request, here at dispatch
+        # (the per-request fallback inside _serve_batch re-enters with the
+        # same requests and must not re-observe).
+        now = time.monotonic()
+        for r in reqs:
+            if r.arrived is not None:
+                self.metrics.observe_queue_age(now - r.arrived)
+        return self._serve_batch(key, cfg, reqs)
 
     def run(self, max_rounds: int = 10_000) -> list[SVDRequest]:
         rounds = 0

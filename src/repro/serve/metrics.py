@@ -42,7 +42,31 @@ from __future__ import annotations
 
 import threading
 
-__all__ = ["ServeMetrics"]
+from repro.obs import StreamingHistogram
+
+__all__ = ["ServeMetrics", "bucket_key_str"]
+
+
+def bucket_key_str(key) -> str:
+    """Canonical string form of a bucket key (DESIGN.md §16).
+
+    Engine bucket keys are the 5-tuple ``(n, bw, dtype, banded,
+    compute_uv)`` (``SVDRequest.key()``); the historical ``str(key)``
+    rendering was fragile (whitespace/quoting of ``repr``) and could
+    collide with user-supplied string keys.  Tuples map to the stable
+    ``n=..,bw=..,dtype=..,banded=..,uv=..`` form — which no ``str(tuple)``
+    can equal — strings pass through unchanged, and anything else falls
+    back to ``repr``.  Used by every keyed surface on
+    :class:`ServeMetrics` (``bucket_tiers``, ``bucket_errors``,
+    quarantine membership, per-bucket latency histograms).
+    """
+    if isinstance(key, str):
+        return key
+    if isinstance(key, tuple) and len(key) == 5:
+        n, bw, dtype, banded, uv = key
+        return (f"n={n},bw={bw},dtype={dtype},"
+                f"banded={int(bool(banded))},uv={int(bool(uv))}")
+    return repr(key)
 
 
 class ServeMetrics:
@@ -78,6 +102,11 @@ class ServeMetrics:
         self._bucket_tiers: dict[str, dict] = {}
         self._bucket_errors: dict[str, dict] = {}   # key -> last_error+count
         self._quarantined: set[str] = set()         # keys circuit-broken now
+        # Latency/queue-age histograms (DESIGN.md §16): fixed-log-bucket,
+        # bounded memory — no raw samples are ever buffered here.
+        self._tier_lat: dict[str, StreamingHistogram] = {}
+        self._bucket_lat: dict[str, StreamingHistogram] = {}
+        self._queue_age = StreamingHistogram()
 
     def add(self, **deltas: int) -> None:
         """Atomically bump counters: ``metrics.add(submitted=1, ...)``."""
@@ -101,12 +130,12 @@ class ServeMetrics:
                         backend: str) -> None:
         """Record which tier a bucket's resolved config routed it to.
 
-        Keyed by ``str(key)`` (bucket keys are tuples; snapshots must stay
+        Keyed by :func:`bucket_key_str` (snapshots must stay
         JSON-serializable).  Idempotent per bucket — the engine calls this
         once at config-resolution time."""
         with self._lock:
-            self._bucket_tiers[str(key)] = {"tier": tier, "n": int(n),
-                                            "backend": backend}
+            self._bucket_tiers[bucket_key_str(key)] = {
+                "tier": tier, "n": int(n), "backend": backend}
 
     def set_bucket_error(self, key, exc: BaseException) -> None:
         """Record the latest failure for a bucket key (DESIGN.md §15):
@@ -114,7 +143,7 @@ class ServeMetrics:
         the number of recorded failures for that key since engine start."""
         with self._lock:
             row = self._bucket_errors.setdefault(
-                str(key), {"last_error": "", "count": 0})
+                bucket_key_str(key), {"last_error": "", "count": 0})
             row["last_error"] = repr(exc)
             row["count"] += 1
 
@@ -123,9 +152,42 @@ class ServeMetrics:
         trips OPEN, ``False`` when a primary-path success recovers it."""
         with self._lock:
             if active:
-                self._quarantined.add(str(key))
+                self._quarantined.add(bucket_key_str(key))
             else:
-                self._quarantined.discard(str(key))
+                self._quarantined.discard(bucket_key_str(key))
+
+    # ------------------------------------------------------------------
+    # latency histograms (DESIGN.md §16)
+
+    def tier_of_bucket(self, key) -> str:
+        """Resolved tier for a bucket key, or ``"unknown"`` pre-resolution."""
+        with self._lock:
+            row = self._bucket_tiers.get(bucket_key_str(key))
+        return row["tier"] if row else "unknown"
+
+    def observe_latency(self, tier: str, key, seconds: float) -> None:
+        """Record one request's client-view latency into the per-tier AND
+        per-bucket streaming histograms.  O(1) memory per tier/bucket —
+        the engines call this at completion time for every served
+        request."""
+        kstr = bucket_key_str(key)
+        with self._lock:
+            th = self._tier_lat.setdefault(tier, StreamingHistogram())
+            bh = self._bucket_lat.setdefault(kstr, StreamingHistogram())
+        th.add(seconds)
+        bh.add(seconds)
+
+    def observe_queue_age(self, seconds: float) -> None:
+        """Record a request's age at dispatch (admission -> launch)."""
+        self._queue_age.add(seconds)
+
+    def histograms(self) -> dict:
+        """Live histogram objects for exposition (``repro.obs.prom``):
+        ``{"tiers": {...}, "buckets": {...}, "queue_age": hist}``."""
+        with self._lock:
+            return {"tiers": dict(self._tier_lat),
+                    "buckets": dict(self._bucket_lat),
+                    "queue_age": self._queue_age}
 
     def set_queue_depth(self, depth: int) -> None:
         with self._lock:
@@ -142,6 +204,13 @@ class ServeMetrics:
             snap["bucket_errors"] = {k: dict(v)
                                      for k, v in self._bucket_errors.items()}
             snap["quarantined_buckets"] = sorted(self._quarantined)
+            tier_lat = dict(self._tier_lat)
+            bucket_lat = dict(self._bucket_lat)
+        snap["latency"] = {
+            "tiers": {t: h.summary() for t, h in tier_lat.items()},
+            "buckets": {k: h.summary() for k, h in bucket_lat.items()},
+            "queue_age": self._queue_age.summary(),
+        }
         slots = snap["served_slots"] + snap["padded_slots"]
         snap["batch_fill_ratio"] = (snap["served_slots"] / slots
                                     if slots else 0.0)
@@ -186,6 +255,9 @@ class ServeMetrics:
             "rejected": snap["rejected"],
             "quarantined_buckets": snap["quarantined_buckets"],
             "bucket_errors": snap["bucket_errors"],
+            "latency_p99_ms": {
+                t: row.get("p99_ms")
+                for t, row in snap["latency"]["tiers"].items()},
         }
 
     def __repr__(self) -> str:

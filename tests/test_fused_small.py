@@ -354,7 +354,8 @@ def test_engine_fused_vmem_fallback_to_staged():
     snap = eng.metrics.snapshot()
     # n=4096 sits past the stage-3 D&C crossover, so the staged fallback
     # is attributed to the "staged-dc" tier (DESIGN.md §14).
-    assert snap["bucket_tiers"][str(key)]["tier"] == "staged-dc"
+    from repro.serve import bucket_key_str
+    assert snap["bucket_tiers"][bucket_key_str(key)]["tier"] == "staged-dc"
 
 
 def test_async_engine_fused_roundtrip():

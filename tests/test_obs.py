@@ -1,0 +1,401 @@
+"""Observability layer tests (DESIGN.md §16): span tracer semantics,
+streaming histogram fidelity/merge/serialization, JSONL trace round-trip,
+the Prometheus exposition endpoint, compile-vs-run attribution, the
+acceptance-bar span coverage of one traced ``svd_batched`` call, and the
+bounded-memory property of the serve-tier latency histograms."""
+
+import json
+import re
+import threading
+import urllib.request
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import obs
+from repro.core import svd as svdmod
+from repro.core.tuning import PipelineConfig
+from repro.obs import (JsonlExporter, MetricsServer, StreamingHistogram,
+                       Tracer, load_jsonl, render_serve_metrics)
+from repro.serve import ServeMetrics, SVDEngine, SVDRequest, bucket_key_str
+
+
+# ---------------------------------------------------------------------------
+# spans
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_attrs_and_timing():
+    tr = Tracer("t")
+    with tr.span("root", n=8) as root:
+        with tr.span("child_a") as a:
+            a.set(bw=4)
+        with tr.span("child_b"):
+            pass
+    assert [r.name for r in tr.roots] == ["root"]
+    assert [c.name for c in root.children] == ["child_a", "child_b"]
+    assert root.attrs["n"] == 8
+    assert root.children[0].attrs["bw"] == 4
+    assert root.dur_s >= root.total_child_seconds() > 0.0
+    assert root.find("child_b") == [root.children[1]]
+
+
+def test_span_exception_safety():
+    """An exception inside a span must close it (duration recorded, stack
+    popped, error attribute set) and propagate unswallowed."""
+    tr = Tracer("t")
+    with pytest.raises(ValueError, match="boom"):
+        with tr.span("outer"):
+            with tr.span("inner"):
+                raise ValueError("boom")
+    (outer,) = tr.roots
+    assert outer.dur_s is not None
+    (inner,) = outer.children
+    assert "boom" in inner.attrs["error"]
+    assert "boom" in outer.attrs["error"]
+    # the thread-local stack is clean: a new span becomes a fresh root
+    with tr.span("after"):
+        pass
+    assert [r.name for r in tr.roots] == ["outer", "after"]
+
+
+def test_ambient_tracer_and_null_span():
+    """obs.span() is a no-op without an active tracer and records when one
+    is activated; activation is scoped."""
+    with obs.span("orphan") as sp:
+        sp.set(x=1)                      # must not raise on the null span
+    tr = Tracer("ambient")
+    with obs.activated(tr):
+        assert obs.current() is tr
+        with obs.span("seen"):
+            pass
+    assert obs.current() is not tr
+    assert [r.name for r in tr.roots] == ["seen"]
+
+
+def test_spans_are_noop_under_jit_tracing():
+    """Host spans inside jitted code must not fire at trace time."""
+    tr = Tracer("t")
+
+    @jax.jit
+    def f(x):
+        with obs.span("inside-jit"):
+            return x * 2
+
+    with obs.activated(tr):
+        np.testing.assert_allclose(f(jnp.ones(3)), 2.0)
+    assert tr.roots == []
+
+
+# ---------------------------------------------------------------------------
+# histogram
+# ---------------------------------------------------------------------------
+
+def test_histogram_percentiles_within_one_bucket():
+    rng = np.random.default_rng(0)
+    samples = rng.lognormal(mean=-4.0, sigma=1.2, size=5000)
+    h = StreamingHistogram()
+    h.extend(samples)
+    r = h.bucket_width_ratio()
+    for q in (50, 95, 99):
+        exact = float(np.percentile(samples, q, method="higher"))
+        approx = h.percentile(q)
+        assert exact / r <= approx <= exact * r, (q, exact, approx)
+    assert h.count == samples.size
+    assert h.min == samples.min() and h.max == samples.max()
+    np.testing.assert_allclose(h.mean, samples.mean())
+
+
+def test_histogram_concurrent_merge_matches_numpy():
+    """N threads each fill a private histogram; the merge must equal one
+    histogram over all samples, and its percentiles must sit within one
+    bucket width of numpy's exact ones."""
+    rng = np.random.default_rng(1)
+    chunks = [rng.lognormal(mean=-5.0, sigma=1.0, size=2000)
+              for _ in range(4)]
+    hists = [StreamingHistogram() for _ in chunks]
+
+    def fill(h, vals):
+        for v in vals:
+            h.add(v)
+
+    threads = [threading.Thread(target=fill, args=(h, c))
+               for h, c in zip(hists, chunks)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    merged = hists[0]
+    for h in hists[1:]:
+        merged.merge(h)
+    allv = np.concatenate(chunks)
+    assert merged.count == allv.size
+    one = StreamingHistogram()
+    one.extend(allv)
+    np.testing.assert_array_equal(merged.counts(), one.counts())
+    r = merged.bucket_width_ratio()
+    for q in (50, 95, 99):
+        exact = float(np.percentile(allv, q, method="higher"))
+        assert exact / r <= merged.percentile(q) <= exact * r
+
+
+def test_histogram_merge_scheme_mismatch_raises():
+    with pytest.raises(ValueError, match="bucket schemes"):
+        StreamingHistogram().merge(StreamingHistogram(buckets_per_decade=5))
+
+
+def test_histogram_dict_roundtrip():
+    h = StreamingHistogram()
+    h.extend([1e-4, 3e-3, 3e-3, 0.2, 7.0])
+    h2 = StreamingHistogram.from_dict(
+        json.loads(json.dumps(h.to_dict())))
+    np.testing.assert_array_equal(h.counts(), h2.counts())
+    assert (h.count, h.sum, h.min, h.max) == (h2.count, h2.sum,
+                                              h2.min, h2.max)
+    for q in (50, 95, 99):
+        assert h.percentile(q) == h2.percentile(q)
+
+
+def test_histogram_bounded_memory_10k():
+    """10k observations through the ServeMetrics latency surface must not
+    grow any per-sample state: bucket arrays stay at their fixed size and
+    the only O(N) quantity is the integer count."""
+    m = ServeMetrics()
+    key = (64, 8, "float64", False, False)
+    m.set_bucket_tier(key, "staged", n=64, backend="ref")
+    rng = np.random.default_rng(2)
+    lats = rng.lognormal(mean=-5.0, sigma=0.8, size=10_000)
+    for lat in lats:
+        m.observe_latency("staged", key, float(lat))
+        m.observe_queue_age(float(lat) / 4)
+    hists = m.histograms()
+    th = hists["tiers"]["staged"]
+    bh = hists["buckets"][bucket_key_str(key)]
+    for h in (th, bh, hists["queue_age"]):
+        assert h.count == 10_000
+        assert h.counts().size == h.num_buckets  # fixed, sample-independent
+        assert h.num_buckets == StreamingHistogram().num_buckets
+    r = th.bucket_width_ratio()
+    for q in (50, 95, 99):
+        exact = float(np.percentile(lats, q, method="higher"))
+        assert exact / r <= th.percentile(q) <= exact * r
+    snap = m.snapshot()
+    assert snap["latency"]["tiers"]["staged"]["count"] == 10_000
+    assert m.health()["latency_p99_ms"]["staged"] > 0
+
+
+# ---------------------------------------------------------------------------
+# JSONL export
+# ---------------------------------------------------------------------------
+
+def test_jsonl_roundtrip(tmp_path):
+    path = tmp_path / "trace.jsonl"
+    tr = Tracer("t", jsonl=str(path))
+    with tr.span("root", n=4) as root:
+        with tr.span("leaf", stage=1):
+            pass
+    roots = load_jsonl(str(path))
+    assert [r.name for r in roots] == ["root"]
+    (rec,) = roots
+    assert rec.attrs["n"] == 4
+    (leaf,) = rec.children
+    assert leaf.name == "leaf" and leaf.attrs["stage"] == 1
+    assert rec.dur_s == pytest.approx(root.dur_s)
+    assert rec.total_child_seconds() == pytest.approx(
+        root.total_child_seconds())
+
+
+def test_jsonl_exporter_threaded(tmp_path):
+    path = tmp_path / "t.jsonl"
+    tr = Tracer("t", jsonl=str(path))
+
+    def work(i):
+        with tr.span(f"w{i}"):
+            with tr.span("inner"):
+                pass
+
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    roots = load_jsonl(str(path))
+    assert sorted(r.name for r in roots) == [f"w{i}" for i in range(8)]
+    assert all(len(r.children) == 1 for r in roots)
+
+
+# ---------------------------------------------------------------------------
+# compile-vs-run attribution
+# ---------------------------------------------------------------------------
+
+def test_jit_call_compile_split_on_fresh_jit():
+    calls = {"n": 0}
+
+    @jax.jit
+    def f(x):
+        calls["n"] += 1                  # python body runs only on compile
+        return (x * x).sum()
+
+    tr = Tracer("t")
+    x = jnp.arange(8, dtype=jnp.float32)
+    with tr.span("outer"):
+        out1 = tr.jit_call("f", f, x)
+    with tr.span("outer"):
+        out2 = tr.jit_call("f", f, x)
+    np.testing.assert_allclose(out1, out2)
+    first, second = tr.roots
+    assert [c.name for c in first.children] == ["f/compile", "f/run"]
+    # steady state reuses the memoized executable with zero span overhead
+    assert second.children == []
+    assert calls["n"] == 1               # python body ran only at compile
+    (compile_sp,) = first.find("f/compile")
+    assert compile_sp.dur_s > 0
+
+
+def test_traced_jit_call_falls_back_without_lower():
+    tr = Tracer("t")
+    with tr.span("outer") as sp:
+        out = tr.jit_call("plain", lambda x: x + 1, 2)
+    assert out == 3
+    assert sp.attrs.get("compile") == "unsplit"
+
+
+# ---------------------------------------------------------------------------
+# metrics endpoint
+# ---------------------------------------------------------------------------
+
+def test_metrics_server_scrape():
+    m = ServeMetrics()
+    m.add(submitted=3, completed=3, batches=1, served_slots=3)
+    m.add_tier("fused", batches=1, served_slots=3, padded_slots=1)
+    key = (16, 4, "float64", False, False)
+    m.set_bucket_tier(key, "fused", n=16, backend="fused_small")
+    for lat in (0.002, 0.004, 0.008):
+        m.observe_latency("fused", key, lat)
+        m.observe_queue_age(lat / 2)
+    srv = MetricsServer(port=0)
+    try:
+        srv.register("svd", m)
+        with urllib.request.urlopen(srv.url, timeout=10) as resp:
+            assert resp.status == 200
+            assert "version=0.0.4" in resp.headers["Content-Type"]
+            text = resp.read().decode("utf-8")
+    finally:
+        srv.stop()
+    assert 'repro_serve_requests_total{engine="svd",event="submitted"} 3' \
+        in text
+    assert 'tier="fused"' in text
+    assert f'bucket="{bucket_key_str(key)}"' in text
+    assert "repro_serve_queue_age_seconds_count" in text
+    assert "repro_serve_health_status" in text
+    # every sample line parses as `name{labels} value`, cumulative buckets
+    # are monotone, and the +Inf bucket equals _count
+    by_series = {}
+    for line in text.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        name_part, _, value = line.rpartition(" ")
+        float(value)                     # parses
+        assert name_part
+        if "_bucket{" in name_part:
+            # series identity = name + labels minus the `le` bound
+            series = re.sub(r'le="[^"]*",?', "", name_part)
+            by_series.setdefault(series, []).append(float(value))
+    for series, counts in by_series.items():
+        assert counts == sorted(counts), series
+    assert ('repro_serve_latency_seconds_count{engine="svd",tier="fused"} 3'
+            in text)
+
+
+def test_render_matches_histogram_counts():
+    m = ServeMetrics()
+    key = (8, 4, "float64", False, False)
+    m.observe_latency("staged", key, 0.5)
+    text = render_serve_metrics(m, engine="e2")
+    assert 'repro_serve_latency_seconds_bucket{engine="e2",le="+Inf",' \
+           'tier="staged"} 1' in text
+
+
+# ---------------------------------------------------------------------------
+# pipeline acceptance: traced svd_batched span coverage
+# ---------------------------------------------------------------------------
+
+def test_svd_batched_trace_coverage_and_compile_split():
+    """The ISSUE acceptance bar: one traced svd_batched call yields a span
+    tree whose stage children account for >= 90%% of the root duration,
+    with compile time attributed separately on the first dispatch — and
+    the traced path returns bit-identical sigma to the untraced one."""
+    cfg = PipelineConfig.resolve(n=24, bw=4, tw=3, backend="ref",
+                                 dtype=np.float64)
+    rng = np.random.default_rng(0)
+    mats = jnp.asarray(rng.standard_normal((3, 24, 24)))
+    ref = np.asarray(svdmod.svd_batched(mats, config=cfg))
+
+    tr = Tracer("svd")
+    sig = np.asarray(svdmod.svd_batched(mats, config=cfg, trace=tr))
+    np.testing.assert_array_equal(sig, ref)
+
+    (root,) = tr.roots
+    # svd_batched delegates to singular_values, which opens the root span
+    assert root.name == "singular_values"
+    assert root.attrs["n"] == 24 and root.attrs["batch"] == 3
+    stages = [c.name for c in root.children]
+    assert stages == ["stage1", "stage2", "stage3"]
+    coverage = root.total_child_seconds() / root.dur_s
+    assert coverage >= 0.90, f"stage spans cover {coverage:.1%} of root"
+    # first dispatch: compile attributed separately somewhere in the tree
+    assert root.find("stage1/compile")
+    assert root.find("stage1/run")
+
+    # steady state: second call with the AOT memo shared — no fresh
+    # compile spans, coverage still holds
+    tr2 = Tracer("svd2")
+    tr2._compiled = tr._compiled
+    sig2 = np.asarray(svdmod.svd_batched(mats, config=cfg, trace=tr2))
+    np.testing.assert_array_equal(sig2, ref)
+    (root2,) = tr2.roots
+    assert not root2.find("stage1/compile")
+    assert root2.total_child_seconds() / root2.dur_s >= 0.90
+
+
+def test_svd_uv_trace_has_replay_children():
+    cfg = PipelineConfig.resolve(n=16, bw=4, tw=3, backend="ref",
+                                 dtype=np.float64)
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.standard_normal((16, 16)))
+    tr = Tracer("uv")
+    u, s, vt = svdmod.svd(a, config=cfg, compute_uv=True, trace=tr)
+    np.testing.assert_allclose(
+        np.asarray(u) @ np.diag(np.asarray(s)) @ np.asarray(vt),
+        np.asarray(a), atol=1e-8)
+    (root,) = tr.roots
+    names = [c.name for c in root.children]
+    for expected in ("stage1", "stage2", "replay", "compose"):
+        assert expected in names, names
+    (replay,) = root.find("replay")
+    assert replay.find("replay_stage1")
+
+
+# ---------------------------------------------------------------------------
+# serve-tier spans
+# ---------------------------------------------------------------------------
+
+def test_engine_dispatch_spans_and_latency_histograms():
+    tr = Tracer("serve")
+    eng = SVDEngine(backend="ref", tracer=tr)
+    rng = np.random.default_rng(3)
+    for i in range(4):
+        eng.submit(SVDRequest(uid=i, matrix=rng.standard_normal((16, 16)),
+                              bw=4))
+    done = eng.run()
+    assert all(r.error is None for r in done)
+    names = [r.name for r in tr.roots]
+    assert "serve/dispatch" in names
+    disp = next(r for r in tr.roots if r.name == "serve/dispatch")
+    assert disp.attrs["bucket"] == bucket_key_str(
+        (16, 4, "float64", False, False))
+    snap = eng.metrics.snapshot()
+    assert sum(row["count"]
+               for row in snap["latency"]["tiers"].values()) == 4
+    assert snap["latency"]["queue_age"]["count"] == 4
