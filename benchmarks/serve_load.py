@@ -456,6 +456,309 @@ def _dc_tier_smoke(*, backend="ref", seed=0):
     return failures
 
 
+def multihost_run(mix, count, rate, *, hosts=2, backend="ref", seed=0,
+                  window_ms=25.0, timeout_s=None, kill_host=False,
+                  jax_distributed=False, host_devices=0, snap_prefix=""):
+    """Open-loop Poisson traffic through :class:`repro.serve.SVDRouter`
+    over ``hosts`` real worker PROCESSES (DESIGN.md §17).
+
+    The router lives in this process; each worker is a
+    ``python -m repro.serve.worker`` subprocess running its own
+    ``AsyncSVDEngine`` (optionally with ``host_devices`` forced host
+    devices, optionally joined into one multi-process jax via
+    ``jax_distributed`` — never combined with ``kill_host``: a killed
+    peer fatally cascades through the XLA coordination service, which is
+    exactly why the fabric's multi-processness lives at the socket
+    level).
+
+    ``kill_host`` SIGKILLs the worker that owns the dominant mix bucket
+    immediately after a request for that bucket is submitted (the engine
+    micro-batch window guarantees it is still in flight), exercising the
+    full drop path: reader EOF -> host quarantine -> in-flight requeue to
+    the survivor -> every future still resolves.  Warmup broadcasts every
+    bucket to every host first, so requeued work never pays a compile.
+
+    Returns ``(rows, result)``: the same client-view accounting identity
+    as :func:`poisson_run` (ok + failed + timed_out + dropped ==
+    submitted, cross-checked against the ROUTER's counters), the fp64
+    sigma oracle error vs ``numpy.linalg.svd``, and the fleet view whose
+    merged histogram the gate checks against pooled exact samples.  With
+    ``snap_prefix`` the per-host engine snapshots and the fleet view are
+    written as ``{prefix}.host-{id}.json`` / ``{prefix}.fleet.json`` (the
+    CI artifacts).
+    """
+    from benchmarks.common import row
+    from repro.obs import StreamingHistogram
+    from repro.serve import SVDRouter
+    from repro.serve.worker import spawn_worker_process
+
+    if kill_host and jax_distributed:
+        raise ValueError("kill_host + jax_distributed: a SIGKILLed peer "
+                         "fatally cascades through the XLA coordination "
+                         "service (DESIGN.md §17)")
+    rng = np.random.default_rng(seed + 7)
+    reqs = _requests(mix, count, seed)
+    router = SVDRouter(heartbeat_s=0.25, heartbeat_timeout_s=2.0,
+                       default_timeout_s=timeout_s)
+    coordinator = ""
+    if jax_distributed:
+        import socket
+        with socket.socket() as s:               # free rendezvous port
+            s.bind(("127.0.0.1", 0))
+            coordinator = f"127.0.0.1:{s.getsockname()[1]}"
+    procs = {
+        f"w{i}": spawn_worker_process(
+            router.address, f"w{i}", backend=backend, window_ms=window_ms,
+            devices=host_devices,
+            coordinator=coordinator,
+            num_processes=hosts if coordinator else 0,
+            process_id=i if coordinator else -1)
+        for i in range(hosts)}
+    victim = None
+    artifacts = []
+    try:
+        if not router.wait_for_hosts(hosts, timeout=240):
+            raise RuntimeError(f"only {len(router.alive_hosts())}/{hosts} "
+                               f"worker hosts connected")
+        # Broadcast-warm every bucket on EVERY host (requeued requests
+        # must never pay a compile), then report only the timed window.
+        router.warm(_mix_cover(mix, seed + 1))
+        router.reset_stats()
+
+        done_at: dict[int, float] = {}
+        errors: dict[int, Exception] = {}
+        results: dict[int, object] = {}
+        hist = StreamingHistogram()          # client-view shadow histogram
+        exact_s: list[float] = []            # pooled exact samples (gate)
+        ev = threading.Event()
+
+        def _cb(req):
+            def cb(fut):
+                now = time.monotonic()
+                done_at[req.uid] = now
+                exc = fut.exception()
+                if exc is not None:
+                    errors[req.uid] = exc
+                else:
+                    results[req.uid] = fut.result()
+                    lat = now - req.arrived
+                    hist.add(lat)
+                    exact_s.append(lat)
+                if len(done_at) == count:
+                    ev.set()
+            return cb
+
+        kill_after = int(count * 0.4) if kill_host else count + 1
+        if kill_host:
+            n0, bw0, dt0, uv0, _w = mix[0]
+            victim = router.owner_of((n0, bw0, dt0, False, uv0))
+        gaps = rng.exponential(1.0 / rate, count)
+        t0 = time.monotonic()
+        killed = False
+        for idx, (r, gap) in enumerate(zip(reqs, gaps)):
+            time.sleep(gap)                      # open loop: never waits
+            router.submit(r).add_done_callback(_cb(r))
+            if (not killed and idx + 1 >= kill_after and victim is not None
+                    and router.owner_of(r.key()) == victim):
+                # SIGKILL right behind a victim-owned submit: the worker's
+                # micro-batch window still holds it, so the drop path has
+                # guaranteed in-flight work to requeue.
+                procs[victim].kill()
+                killed = True
+        ev.wait(timeout=600)
+        t_total = time.monotonic() - t0
+
+        host_stats = router.collect_host_stats()
+        fleet = router.fleet()
+        snap = fleet["router"]
+        acct = _client_account(reqs, done_at, errors, snap)
+        err64 = err32 = 0.0                      # sigma oracle, ALL results
+        for r in reqs:
+            res = results.get(r.uid)
+            if res is None:
+                continue
+            ref = np.linalg.svd(r.matrix.astype(np.float64),
+                                compute_uv=False)
+            e = float(np.abs(np.asarray(res.sigma, dtype=np.float64)
+                             - ref).max() / ref.max())
+            if np.dtype(r.matrix.dtype) == np.float64:
+                err64 = max(err64, e)
+            else:
+                err32 = max(err32, e)
+        merged = fleet["latency"]["merged_summary"]
+        if snap_prefix:
+            for hid, payload in sorted(host_stats.items()):
+                path = f"{snap_prefix}.host-{hid}.json"
+                with open(path, "w") as f:
+                    json.dump(payload, f, indent=2, sort_keys=True)
+                artifacts.append(path)
+            path = f"{snap_prefix}.fleet.json"
+            with open(path, "w") as f:
+                json.dump(fleet, f, indent=2, sort_keys=True)
+            artifacts.append(path)
+        result = {
+            "hosts": hosts, "requests": count, "rate_rps": rate,
+            "kill_host": bool(kill_host), "victim": victim,
+            "victim_returncode": (procs[victim].poll()
+                                  if victim is not None else None),
+            "jax_distributed": bool(jax_distributed),
+            "completed": acct["ok"], "failed": acct["failed"],
+            "timed_out": acct["timed_out"],
+            "rejected": int(snap["rejected"]),
+            "dropped": acct["dropped"], "accounting": acct,
+            "throughput_rps": hist.count / t_total if t_total > 0 else 0.0,
+            "sigma_max_rel_err": err64, "sigma_max_rel_err_f32": err32,
+            "latency_ms": {"p50": merged["p50_ms"], "p95": merged["p95_ms"],
+                           "p99": merged["p99_ms"],
+                           "mean": merged["mean_ms"],
+                           "max": merged["max_ms"]},
+            "latency_exact_ms": sorted(v * 1e3 for v in exact_s),
+            "latency_bucket_ratio": fleet["latency"]["bucket_ratio"],
+            "fleet": fleet,
+            "host_stats_collected": sorted(host_stats),
+            "artifacts": artifacts,
+        }
+    finally:
+        router.stop()
+        for p in procs.values():
+            try:
+                p.wait(timeout=30)
+            except Exception:                    # noqa: BLE001 — cleanup
+                p.kill()
+    lm = result["latency_ms"]
+    tag = (f"x{count}@h{hosts}"
+           + ("+kill" if kill_host else "")
+           + ("+dist" if jax_distributed else ""))
+    svc_us = (1e6 / result["throughput_rps"] if result["throughput_rps"]
+              else 0.0)
+    rows = [row(f"serve_load/multihost/{tag}", svc_us,
+                f"p50={lm['p50']:.1f}ms;p95={lm['p95']:.1f}ms;"
+                f"p99={lm['p99']:.1f}ms;"
+                f"thpt={result['throughput_rps']:.1f}rps;"
+                f"retried={snap['retried']};"
+                f"alive={len(fleet['alive_hosts'])}/{hosts}")]
+    return rows, result
+
+
+def main_multihost(args) -> None:
+    """The ``--hosts N`` driver + blocking gate (the CI multihost step)."""
+    mix = SMOKE_MIX if args.smoke else FULL_MIX
+    count = args.requests or (24 if args.smoke else 96)
+    rate = args.rate or (120.0 if args.smoke else 60.0)
+    p99_budget = args.p99_ms or (8000.0 if args.smoke else 0.0)
+    prefix = ""
+    if args.json:
+        prefix = (args.json[:-5] if args.json.endswith(".json")
+                  else args.json)
+
+    print("name,us_per_call,derived")
+    rows, res = multihost_run(
+        mix, count, rate, hosts=args.hosts, backend="ref", seed=args.seed,
+        kill_host=args.kill_host, jax_distributed=args.jax_distributed,
+        host_devices=args.host_devices, snap_prefix=prefix)
+    for line in rows:
+        print(line, flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# json written to {args.json}", flush=True)
+        for path in res["artifacts"]:
+            print(f"# artifact written to {path}", flush=True)
+
+    failures = []
+    fleet = res["fleet"]
+    snap = fleet["router"]
+    # Zero client-visible failures — the headline gate: every submitted
+    # request resolved ok, even with a host SIGKILLed mid-run.
+    for what in ("dropped", "timed_out", "rejected", "failed"):
+        if res[what]:
+            failures.append(f"{res[what]} request(s) {what} (must be 0)")
+    if not res["accounting"]["consistent"]:
+        failures.append(f"accounting inconsistent: client view "
+                        f"{res['accounting']} vs router counters {snap}")
+    if res["sigma_max_rel_err"] > 1e-12:
+        failures.append(f"fp64 sigma mismatch vs numpy.linalg.svd: "
+                        f"{res['sigma_max_rel_err']:.2e} rel > 1e-12")
+    if res["sigma_max_rel_err_f32"] > 1e-4:
+        failures.append(f"fp32 sigma mismatch vs numpy.linalg.svd: "
+                        f"{res['sigma_max_rel_err_f32']:.2e} rel > 1e-4")
+    # Merged-histogram fidelity (DESIGN.md §16/§17): the fleet percentiles
+    # come from per-host histograms folded with StreamingHistogram.merge;
+    # each must land within one log-bucket width of the POOLED exact
+    # samples (numpy method="higher", the histogram's rank convention).
+    exact = np.asarray(res["latency_exact_ms"])
+    if exact.size:
+        ratio = res["latency_bucket_ratio"]
+        for q in (50, 95, 99):
+            e = float(np.percentile(exact, q, method="higher"))
+            h = res["latency_ms"][f"p{q}"]
+            if not (e / ratio <= h <= e * ratio):
+                failures.append(
+                    f"merged histogram p{q}={h:.3f}ms off pooled exact "
+                    f"{e:.3f}ms by more than one bucket width "
+                    f"(r={ratio:.3f})")
+    else:
+        failures.append("no exact latency samples for the merged-histogram "
+                        "fidelity check")
+    if args.kill_host:
+        # The drop path must have actually fired: the victim died, was
+        # quarantined at host granularity, and its in-flight requests were
+        # requeued (retried) onto a survivor.
+        if res["victim"] is None:
+            failures.append("kill gate: no victim host resolved")
+        elif res["victim_returncode"] is None:
+            failures.append(f"kill gate: victim {res['victim']} still "
+                            f"running")
+        elif res["victim"] not in fleet["dead_hosts"]:
+            failures.append(f"kill gate: victim {res['victim']} not in "
+                            f"dead_hosts {fleet['dead_hosts']}")
+        if not snap["retried"]:
+            failures.append("kill gate: no requests requeued (retried=0 — "
+                            "the kill landed with nothing in flight)")
+        if not snap["quarantined"]:
+            failures.append("kill gate: no host quarantine recorded")
+        requeued = sum(h.get("requeued", 0)
+                       for hid, h in snap.get("hosts", {}).items()
+                       if hid != res["victim"])
+        if not requeued:
+            failures.append("kill gate: no survivor host attributed with "
+                            "requeued work")
+    if args.jax_distributed:
+        # The bootstrap gate: every worker joined one multi-process jax —
+        # hello-reported process counts and the global/local device split
+        # must be coherent (this is the serve_mesh local-devices premise).
+        infos = {h: v for h, v in fleet["hosts"].items()}
+        local_total = sum(v.get("devices", 0) for v in infos.values())
+        for hid, v in sorted(infos.items()):
+            if v.get("processes") != args.hosts:
+                failures.append(f"distributed gate: host {hid} reports "
+                                f"processes={v.get('processes')} != "
+                                f"{args.hosts}")
+            if v.get("global_devices") != local_total:
+                failures.append(f"distributed gate: host {hid} reports "
+                                f"global_devices={v.get('global_devices')} "
+                                f"!= sum of local devices {local_total}")
+        seen_idx = sorted(v.get("process_index", -1) for v in infos.values())
+        if seen_idx != list(range(args.hosts)):
+            failures.append(f"distributed gate: process indices {seen_idx} "
+                            f"!= 0..{args.hosts - 1}")
+    if p99_budget and res["latency_ms"]["p99"] > p99_budget:
+        failures.append(f"p99 latency {res['latency_ms']['p99']:.1f}ms "
+                        f"> budget {p99_budget:g}ms")
+    print(f"# hosts={len(fleet['alive_hosts'])}/{args.hosts} alive "
+          f"victim={res['victim']} retried={snap['retried']} "
+          f"sigma_err={res['sigma_max_rel_err']:.2e} "
+          f"p99={res['latency_ms']['p99']:.1f}ms "
+          f"dropped={res['dropped']} timed_out={res['timed_out']}",
+          flush=True)
+    if failures:
+        for f in failures:
+            print(f"# SERVE GATE FAIL: {f}", flush=True)
+        sys.exit(1)
+    print("# serve gate OK", flush=True)
+
+
 def run(smoke: bool = False):
     """benchmarks.run suite entry: CSV rows (CI gates only us_per_call)."""
     mix = SMOKE_MIX if smoke else FULL_MIX
@@ -499,8 +802,28 @@ def main(argv=None) -> None:
     ap.add_argument("--trace-jsonl", default="", metavar="PATH",
                     help="export engine dispatch/retry/degraded spans to "
                          "PATH as JSONL (repro.obs.Tracer; DESIGN.md §16)")
+    ap.add_argument("--hosts", type=int, default=0, metavar="N",
+                    help="multi-host mode (DESIGN.md §17): route the Poisson "
+                         "run through repro.serve.SVDRouter over N worker "
+                         "PROCESSES; gates zero client-visible failures, "
+                         "the fp64 sigma oracle, and merged-histogram "
+                         "fidelity across hosts")
+    ap.add_argument("--kill-host", action="store_true",
+                    help="[--hosts] SIGKILL the worker owning the dominant "
+                         "bucket mid-run and assert the router requeued its "
+                         "in-flight work with zero client-visible failures")
+    ap.add_argument("--jax-distributed", action="store_true",
+                    help="[--hosts] bootstrap the workers into one "
+                         "multi-process jax (jax.distributed.initialize) "
+                         "and assert the hello-reported process/device "
+                         "topology; incompatible with --kill-host")
+    ap.add_argument("--host-devices", type=int, default=0, metavar="D",
+                    help="[--hosts] XLA_FLAGS-forced host device count per "
+                         "worker (0: leave the workers' env alone)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.hosts >= 2:
+        return main_multihost(args)
 
     import jax
     jax.config.update("jax_enable_x64", True)

@@ -277,3 +277,40 @@ print(f"stage spans cover {coverage:.1%} of the {root11.dur_s * 1e3:.1f} ms "
 assert coverage >= 0.90                       # the §16 acceptance bar
 assert root11.find("stage1/compile")          # first dispatch: compile split
 print("OK")
+
+# --- 12. multi-host serving: router + two local worker processes -------------
+# (DESIGN.md §17)  The serve tier across PROCESS boundaries: SVDRouter owns
+# admission and pins each shape-bucket to one worker host (rendezvous
+# hashing keeps micro-batching intact); each worker is a real subprocess
+# running its own AsyncSVDEngine, speaking the stdlib-socket wire protocol.
+# A dropped host is quarantined and its in-flight work requeued — zero
+# client-visible failures is the design contract, CI-gated with a SIGKILL.
+from repro.serve import SVDRouter
+from repro.serve.worker import spawn_worker_process
+
+router = SVDRouter()
+procs = [spawn_worker_process(router.address, f"w{i}", backend="ref")
+         for i in range(2)]
+try:
+    assert router.wait_for_hosts(2, timeout=240)
+    mats12 = [rng.standard_normal((16, 16)) for _ in range(6)]
+    futs12 = [router.submit(SVDRequest(uid=i, matrix=m, bw=4))
+              for i, m in enumerate(mats12)]
+    for m, f in zip(mats12, futs12):
+        ref = np.linalg.svd(m, compute_uv=False)
+        np.testing.assert_allclose(f.result(timeout=300).sigma, ref,
+                                   atol=1e-12 * ref[0])
+    fleet = router.fleet()
+    per_host = {h: row["completed"]
+                for h, row in fleet["router"]["hosts"].items()}
+    print(f"\nserved {fleet['router']['completed']} requests across "
+          f"{len(fleet['alive_hosts'])} worker processes: {per_host}")
+    print(f"fleet merged latency p99 = "
+          f"{fleet['latency']['merged_summary']['p99_ms']:.1f} ms "
+          f"(per-host histograms folded via StreamingHistogram.merged)")
+    assert sum(per_host.values()) == 6
+finally:
+    router.stop()
+    for p in procs:
+        p.wait(timeout=30)
+print("OK")

@@ -27,7 +27,18 @@ from repro.core import svd as svdmod
 
 __all__ = ["batched_singular_values", "sharded_singular_values",
            "sharded_svd", "sharded_pipeline_dispatch", "shard_pad",
-           "spectrum_of_params", "square_embed"]
+           "spectrum_of_params", "square_embed", "process_info"]
+
+
+def process_info() -> tuple[int, int]:
+    """``(process_index, process_count)`` under multi-process JAX, or
+    ``(0, 1)`` on any jax predating (or unconfigured for) the
+    distributed runtime — callers (worker hello frames, mesh builders,
+    DESIGN.md §17) never need their own hasattr dance."""
+    try:
+        return int(jax.process_index()), int(jax.process_count())
+    except Exception:                        # noqa: BLE001 — single process
+        return 0, 1
 
 
 def square_embed(w: jax.Array, size: int) -> jax.Array:

@@ -9,12 +9,54 @@ devices via its own XLA_FLAGS).
 from __future__ import annotations
 
 import os
+import warnings
 
 import jax
 
 from repro.parallel.sharding import AxisRules, DEFAULT_RULES, MULTIPOD_RULES
 
-__all__ = ["make_production_mesh", "rules_for", "serve_mesh"]
+__all__ = ["make_production_mesh", "rules_for", "serve_mesh",
+           "init_distributed"]
+
+_DIST_INITIALIZED = False
+
+
+def init_distributed(*, coordinator: str | None = None,
+                     num_processes: int | None = None,
+                     process_id: int | None = None) -> bool:
+    """Best-effort multi-process JAX bootstrap (DESIGN.md §17).
+
+    Calls ``jax.distributed.initialize`` with the given (or
+    ``$REPRO_DIST_COORDINATOR`` / ``$REPRO_DIST_NUM_PROCESSES`` /
+    ``$REPRO_DIST_PROCESS_ID``) rendezvous parameters; returns True iff
+    the bootstrap ran.  Never raises: an unset/partial config returns
+    False (single-process operation is the default, not an error), and a
+    failed initialize warns and returns False — the serve fabric's
+    multi-processness lives at the socket level (``serve/router.py``),
+    so a worker that cannot join the XLA coordination service still
+    serves on its local devices.  Must run before the first device query
+    locks the backend; idempotent (a second call is a no-op True).
+    """
+    global _DIST_INITIALIZED
+    if _DIST_INITIALIZED:
+        return True
+    env = os.environ.get
+    coordinator = coordinator or env("REPRO_DIST_COORDINATOR", "")
+    nproc = (num_processes if num_processes
+             else int(env("REPRO_DIST_NUM_PROCESSES", "0") or 0))
+    pid = (process_id if process_id is not None and process_id >= 0
+           else int(env("REPRO_DIST_PROCESS_ID", "-1") or -1))
+    if not coordinator or nproc < 2 or pid < 0:
+        return False
+    try:
+        jax.distributed.initialize(coordinator_address=coordinator,
+                                   num_processes=nproc, process_id=pid)
+    except Exception as exc:                 # noqa: BLE001 — best-effort
+        warnings.warn(f"jax.distributed.initialize failed "
+                      f"(serving single-process): {exc!r}", stacklevel=2)
+        return False
+    _DIST_INITIALIZED = True
+    return True
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -63,9 +105,15 @@ def serve_mesh(*, env_var: str = "REPRO_SERVE_MESH"):
                 f"count") from None
     if not (hasattr(jax, "shard_map") and hasattr(jax.sharding, "AxisType")):
         return None
-    ndev = jax.device_count() if spec == "auto" else int(spec)
-    ndev = min(ndev, jax.device_count())
+    # LOCAL devices only: the serve engines' sharded dispatch feeds host
+    # arrays to this process's addressable devices.  Under multi-process
+    # JAX (init_distributed) jax.device_count() is GLOBAL — building the
+    # mesh from it would double-count every remote host's devices and
+    # dispatch onto devices this process cannot feed (DESIGN.md §17).
+    local = jax.local_devices()
+    ndev = len(local) if spec == "auto" else int(spec)
+    ndev = min(ndev, len(local))
     if ndev < 2:
         return None
-    return jax.make_mesh((ndev,), ("data",),
+    return jax.make_mesh((ndev,), ("data",), devices=local[:ndev],
                          axis_types=(jax.sharding.AxisType.Auto,))

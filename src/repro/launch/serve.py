@@ -50,7 +50,13 @@ def main(argv=None):
                     help="[--svd] serve Prometheus-format engine metrics at "
                          "127.0.0.1:PORT/metrics for the lifetime of the "
                          "run (0 = ephemeral port; DESIGN.md §16)")
+    ap.add_argument("--hosts", type=int, default=0, metavar="N",
+                    help="[--svd] multi-host mode: spawn N worker processes "
+                         "and route through repro.serve.SVDRouter "
+                         "(DESIGN.md §17)")
     args = ap.parse_args(argv)
+    if args.svd and args.hosts >= 2:
+        return main_svd_multihost(args)
     if args.svd:
         return main_svd(args)
 
@@ -149,6 +155,74 @@ def main_svd(args):
                       for k, v in health.items()})
     if mserver is not None:
         mserver.stop()
+
+
+def main_svd_multihost(args):
+    """Two-plus-process serve demo (DESIGN.md §17): a router in this
+    process, ``--hosts`` worker processes, the same open loop as
+    :func:`main_svd` routed fleet-wide.  The canonical measurement tool
+    is ``benchmarks/serve_load.py --hosts N``; this is the demo."""
+    from repro.serve import SVDRequest
+    from repro.serve.router import SVDRouter
+    from repro.serve.worker import spawn_worker_process
+
+    n, bw = args.svd_n, args.svd_bw
+    rng = np.random.default_rng(0)
+    router = SVDRouter(
+        default_timeout_s=(args.timeout_ms / 1e3 or None))
+    procs = [spawn_worker_process(router.address, f"w{i}", backend="auto")
+             for i in range(args.hosts)]
+    mserver = None
+    try:
+        if not router.wait_for_hosts(args.hosts, timeout=120):
+            raise RuntimeError(
+                f"only {len(router.alive_hosts())}/{args.hosts} worker "
+                f"hosts connected")
+        if args.metrics_port is not None:
+            from repro.obs import MetricsServer, render_fleet_metrics
+            mserver = MetricsServer(port=args.metrics_port)
+            mserver.register("router", router.metrics)
+            mserver.register_provider(
+                "fleet", lambda: render_fleet_metrics(router.fleet()))
+            print(f"metrics endpoint: {mserver.url}")
+        # Warm every host's bucket compile outside the timed window.
+        router.warm([SVDRequest(uid=-1,
+                                matrix=rng.standard_normal((n, n)), bw=bw)])
+        gaps = rng.exponential(1.0 / args.rate, args.requests)
+        futs, lat = [], []
+        t0 = time.time()
+        for uid in range(args.requests):
+            time.sleep(gaps[uid])
+            r = SVDRequest(uid=uid, matrix=rng.standard_normal((n, n)),
+                           bw=bw)
+            futs.append((r, router.submit(r)))
+        for r, f in futs:
+            try:
+                f.result(timeout=600)
+                lat.append(time.monotonic() - r.arrived)
+            except Exception as exc:             # noqa: BLE001 — demo report
+                print(f"request {r.uid} failed: {exc!r}")
+        dt = time.time() - t0
+        fleet = router.fleet()
+        if lat:
+            p50, p95, p99 = np.percentile(np.asarray(lat) * 1e3,
+                                          [50, 95, 99])
+            print(f"served {len(lat)}/{args.requests} requests in "
+                  f"{dt:.2f}s ({len(lat) / dt:.1f} req/s) across "
+                  f"{len(fleet['alive_hosts'])} hosts")
+            print(f"latency p50/p95/p99 = {p50:.1f}/{p95:.1f}/{p99:.1f} ms")
+        print("fleet hosts:", {h: row for h, row
+                               in fleet["router"]["hosts"].items()})
+        print("merged latency:", fleet["latency"]["merged_summary"])
+    finally:
+        router.stop()
+        if mserver is not None:
+            mserver.stop()
+        for p in procs:
+            try:
+                p.wait(timeout=15)
+            except Exception:                    # noqa: BLE001 — cleanup
+                p.kill()
 
 
 if __name__ == "__main__":

@@ -16,7 +16,7 @@ Three pieces, importable from this package root:
 
 from .export import JsonlExporter, SpanRecord, load_jsonl
 from .hist import StreamingHistogram
-from .prom import MetricsServer, render_serve_metrics
+from .prom import MetricsServer, render_fleet_metrics, render_serve_metrics
 from .trace import (
     Span,
     Tracer,
@@ -33,6 +33,7 @@ __all__ = [
     "load_jsonl",
     "StreamingHistogram",
     "MetricsServer",
+    "render_fleet_metrics",
     "render_serve_metrics",
     "Span",
     "Tracer",

@@ -140,6 +140,23 @@ class StreamingHistogram:
             self._max = max(self._max, omax)
         return self
 
+    @classmethod
+    def merged(cls, items) -> "StreamingHistogram":
+        """Fold an iterable of histograms and/or :meth:`to_dict` payloads
+        into one fresh histogram (the cross-host aggregation primitive,
+        DESIGN.md §17: workers ship dicts over the wire, the router holds
+        live objects — both merge here).  An empty iterable yields an
+        empty default-scheme histogram; mixed schemes raise, as in
+        :meth:`merge`."""
+        out = None
+        for item in items:
+            h = cls.from_dict(item) if isinstance(item, dict) else item
+            if out is None:
+                out = cls(lo=h.lo, hi=h.hi,
+                          buckets_per_decade=h.buckets_per_decade)
+            out.merge(h)
+        return out if out is not None else cls()
+
     # ------------------------------------------------------------------
     # queries
 

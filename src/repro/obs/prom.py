@@ -19,9 +19,11 @@ import math
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
-__all__ = ["render_serve_metrics", "MetricsServer", "escape_label"]
+__all__ = ["render_serve_metrics", "render_fleet_metrics", "MetricsServer",
+           "escape_label"]
 
 _PREFIX = "repro_serve"
+_FLEET = "repro_fleet"
 
 
 def escape_label(v) -> str:
@@ -124,6 +126,55 @@ def render_serve_metrics(metrics, *, engine: str = "svd") -> str:
     return "\n".join(lines) + "\n"
 
 
+def render_fleet_metrics(fleet: dict) -> str:
+    """Exposition text for a fleet view (``SVDRouter.fleet()``,
+    DESIGN.md §17): host liveness, per-host request attribution, and the
+    per-host + merged client-view latency histograms.  Takes the plain
+    dict — not the router — so a snapshot written to disk (the CI
+    artifact) renders identically to a live scrape."""
+    from repro.obs.hist import StreamingHistogram
+
+    lines: list[str] = []
+    hosts = fleet.get("hosts", {})
+    lines.append(f"# HELP {_FLEET}_hosts_alive Worker hosts currently alive.")
+    lines.append(f"# TYPE {_FLEET}_hosts_alive gauge")
+    lines.append(_sample(f"{_FLEET}_hosts_alive", {},
+                         len(fleet.get("alive_hosts", []))))
+    lines.append(f"# HELP {_FLEET}_host_up Per-host liveness (1=alive).")
+    lines.append(f"# TYPE {_FLEET}_host_up gauge")
+    for hid, row in sorted(hosts.items()):
+        lines.append(_sample(f"{_FLEET}_host_up", {"host": hid},
+                             int(bool(row.get("alive")))))
+    lines.append(f"# HELP {_FLEET}_host_requests_total "
+                 "Per-host dispatch/completion/requeue attribution.")
+    lines.append(f"# TYPE {_FLEET}_host_requests_total counter")
+    for hid, row in sorted(fleet.get("router", {}).get("hosts", {}).items()):
+        for event, v in sorted(row.items()):
+            lines.append(_sample(f"{_FLEET}_host_requests_total",
+                                 {"host": hid, "event": event}, int(v)))
+    lines.append(f"# HELP {_FLEET}_router_requests_total "
+                 "Fleet-level client-view serve counters.")
+    lines.append(f"# TYPE {_FLEET}_router_requests_total counter")
+    router = fleet.get("router", {})
+    for event in ("submitted", "completed", "failed", "timed_out",
+                  "rejected", "retried", "quarantined", "bucket_hits"):
+        if event in router:
+            lines.append(_sample(f"{_FLEET}_router_requests_total",
+                                 {"event": event}, int(router[event])))
+    lat = fleet.get("latency", {})
+    lines.append(f"# HELP {_FLEET}_latency_seconds "
+                 "Client-view latency by host, plus the cross-host merge.")
+    lines.append(f"# TYPE {_FLEET}_latency_seconds histogram")
+    for hid, payload in sorted(lat.get("per_host", {}).items()):
+        _render_hist(lines, f"{_FLEET}_latency_seconds", {"host": hid},
+                     StreamingHistogram.from_dict(payload))
+    if lat.get("merged"):
+        _render_hist(lines, f"{_FLEET}_latency_seconds",
+                     {"host": "_merged"},
+                     StreamingHistogram.from_dict(lat["merged"]))
+    return "\n".join(lines) + "\n"
+
+
 class MetricsServer:
     """Tiny /metrics endpoint on stdlib ``ThreadingHTTPServer``.
 
@@ -136,8 +187,10 @@ class MetricsServer:
 
     def __init__(self, port: int = 0, host: str = "127.0.0.1") -> None:
         self._registry: dict[str, object] = {}
+        self._providers: dict[str, object] = {}
         self._reg_lock = threading.Lock()
-        registry, reg_lock = self._registry, self._reg_lock
+        registry, providers = self._registry, self._providers
+        reg_lock = self._reg_lock
 
         class Handler(BaseHTTPRequestHandler):
             def do_GET(self) -> None:  # noqa: N802 (stdlib API name)
@@ -146,9 +199,16 @@ class MetricsServer:
                     return
                 with reg_lock:
                     items = list(registry.items())
+                    provs = list(providers.items())
                 body = "".join(render_serve_metrics(m, engine=name)
                                for name, m in items)
-                if not items:
+                for name, fn in provs:
+                    try:
+                        body += fn()
+                    except Exception as exc:     # noqa: BLE001 — a broken
+                        body += (f"# provider {name} failed: "
+                                 f"{escape_label(exc)}\n")  # provider must
+                if not items and not provs:      # not kill the scrape
                     body = "# no metrics registered\n"
                 data = body.encode("utf-8")
                 self.send_response(200)
@@ -177,6 +237,15 @@ class MetricsServer:
     def register(self, name: str, metrics) -> None:
         with self._reg_lock:
             self._registry[name] = metrics
+
+    def register_provider(self, name: str, fn) -> None:
+        """Register a callable returning ready-made exposition text —
+        how the router's fleet view joins a scrape
+        (``server.register_provider("fleet", lambda:
+        render_fleet_metrics(router.fleet()))``, DESIGN.md §17).  Called
+        per scrape; a raising provider degrades to a comment line."""
+        with self._reg_lock:
+            self._providers[name] = fn
 
     def stop(self) -> None:
         self._httpd.shutdown()

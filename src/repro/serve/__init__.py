@@ -8,7 +8,10 @@ engine as ``.metrics``.  Fault tolerance (DESIGN.md §15): ``FaultPlan``
 (deterministic injection), ``RetryPolicy`` (backoff ladder),
 ``BucketQuarantine`` (per-bucket circuit breaker) in ``serve/faults.py``;
 the typed ``NumericalFault`` lives in ``core/svd.py`` and is re-exported
-here for serve-side callers.
+here for serve-side callers.  Multi-host tier (DESIGN.md §17):
+``SVDRouter`` (cross-process admission front end, ``serve/router.py``)
+over ``ServeWorker`` hosts (``serve/worker.py``) speaking the
+``serve/wire.py`` frame protocol.
 """
 from repro.core.svd import NumericalFault
 from repro.serve.async_engine import AsyncSVDEngine, QueueFullError
@@ -18,9 +21,14 @@ from repro.serve.faults import (BucketQuarantine, FaultPlan,
                                 InjectedDeviceLoss, InjectedDispatchError,
                                 InjectedFault, RetryPolicy)
 from repro.serve.metrics import ServeMetrics, bucket_key_str
+from repro.serve.router import HostDownError, SVDRouter
+from repro.serve.worker import (ServeWorker, spawn_worker_process,
+                                start_inprocess_worker)
 
 __all__ = ["Engine", "Request", "ServeConfig", "SVDEngine", "SVDRequest",
            "AsyncSVDEngine", "QueueFullError", "ServeMetrics",
            "bucket_key_str",
+           "SVDRouter", "HostDownError", "ServeWorker",
+           "start_inprocess_worker", "spawn_worker_process",
            "FaultPlan", "RetryPolicy", "BucketQuarantine", "NumericalFault",
            "InjectedFault", "InjectedDispatchError", "InjectedDeviceLoss"]

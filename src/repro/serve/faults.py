@@ -98,10 +98,12 @@ class FaultPlan:
     latency_rate: float = 0.0            # sleep latency_s before dispatch
     latency_s: float = 0.0
     shard_loss_rate: float = 0.0         # per-shard loss in sharded dispatch
+    host_loss_rate: float = 0.0          # whole-host loss per heartbeat tick
     dispatch_errors_at: tuple = ()       # scripted dispatch ordinals (0-based)
     device_loss_at: tuple = ()
     nan_at: tuple = ()                   # scripted result ordinals
     shard_loss_at: tuple = ()            # scripted sharded-dispatch ordinals
+    host_loss_at: tuple = ()             # scripted heartbeat-tick ordinals
     max_faults: int | None = None
 
     def __post_init__(self) -> None:
@@ -110,9 +112,10 @@ class FaultPlan:
         self._dispatches = 0             # before_dispatch ordinal
         self._results = 0                # corrupt_sigma ordinal
         self._sharded = 0                # lost_shards ordinal
+        self._host_ticks = 0             # lose_host ordinal (heartbeats)
         self.injected: dict[str, int] = {
             "dispatch_error": 0, "device_loss": 0, "nan": 0, "inf": 0,
-            "latency": 0, "shard_loss": 0}
+            "latency": 0, "shard_loss": 0, "host_loss": 0}
 
     # ------------------------------------------------------------------
 
@@ -193,11 +196,32 @@ class FaultPlan:
                 self._count("shard_loss")
             return sorted(lost)
 
+    def lose_host(self, host_ids) -> str | None:
+        """Host id to drop at this heartbeat tick, or ``None``
+        (consulted by :class:`~repro.serve.router.SVDRouter` once per
+        tick — DESIGN.md §17).  Exactly one uniform plus one integer
+        draw per call keeps the stream aligned whatever fires; scripted
+        ``host_loss_at`` ordinals index heartbeat TICKS, and the victim
+        is chosen by the integer draw over the alive set."""
+        host_ids = list(host_ids)
+        with self._lock:
+            i = self._host_ticks
+            self._host_ticks += 1
+            u = float(self._rng.uniform())
+            j = int(self._rng.integers(max(len(host_ids), 1)))
+            if not host_ids or not self._budget_left():
+                return None
+            if i in self.host_loss_at or u < self.host_loss_rate:
+                self._count("host_loss")
+                return host_ids[j % len(host_ids)]
+            return None
+
     def snapshot(self) -> dict:
         """Tally of injections so far (for reports and gate assertions)."""
         with self._lock:
             return {"dispatches": self._dispatches, "results": self._results,
-                    "sharded": self._sharded, **dict(self.injected)}
+                    "sharded": self._sharded,
+                    "host_ticks": self._host_ticks, **dict(self.injected)}
 
 
 @dataclasses.dataclass(frozen=True)

@@ -93,12 +93,18 @@ class ServeMetrics:
     # per-tier slice of the dispatch counters ("fused" vs "staged")
     _TIER_COUNTERS = ("batches", "served_slots", "padded_slots")
 
+    # per-host slice for the multi-host router (DESIGN.md §17): where each
+    # request was dispatched, where it completed/failed, and which
+    # SURVIVING host absorbed a dead host's requeued work
+    _HOST_COUNTERS = ("dispatched", "completed", "failed", "requeued")
+
     def __init__(self) -> None:
         self._lock = threading.Lock()
         for name in self._COUNTERS:
             setattr(self, name, 0)
         self.queue_depth = 0                  # gauge, set by the engine
         self._tiers: dict[str, dict[str, int]] = {}
+        self._hosts: dict[str, dict[str, int]] = {}
         self._bucket_tiers: dict[str, dict] = {}
         self._bucket_errors: dict[str, dict] = {}   # key -> last_error+count
         self._quarantined: set[str] = set()         # keys circuit-broken now
@@ -124,6 +130,17 @@ class ServeMetrics:
                 tier, {name: 0 for name in self._TIER_COUNTERS})
             for name, delta in deltas.items():
                 assert name in self._TIER_COUNTERS, name
+                row[name] += int(delta)
+
+    def add_host(self, host: str, **deltas: int) -> None:
+        """Bump the per-host attribution slice (router-side, DESIGN.md
+        §17): ``add_host("w0", dispatched=1)``.  Hosts are created on
+        first use, like tiers."""
+        with self._lock:
+            row = self._hosts.setdefault(
+                str(host), {name: 0 for name in self._HOST_COUNTERS})
+            for name, delta in deltas.items():
+                assert name in self._HOST_COUNTERS, name
                 row[name] += int(delta)
 
     def set_bucket_tier(self, key, tier: str, *, n: int,
@@ -204,6 +221,7 @@ class ServeMetrics:
             snap["bucket_errors"] = {k: dict(v)
                                      for k, v in self._bucket_errors.items()}
             snap["quarantined_buckets"] = sorted(self._quarantined)
+            snap["hosts"] = {h: dict(row) for h, row in self._hosts.items()}
             tier_lat = dict(self._tier_lat)
             bucket_lat = dict(self._bucket_lat)
         snap["latency"] = {

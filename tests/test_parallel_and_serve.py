@@ -168,6 +168,7 @@ def test_engine_continuous_batching_refills():
 # ---------------------------------------------------------------------------
 
 @needs_axis_type
+@pytest.mark.distributed
 def test_sharded_train_step_8dev(subproc):
     code = """
 import jax, jax.numpy as jnp
@@ -197,6 +198,7 @@ print("SHARDED_OK", float(m["loss"]))
 
 
 @needs_axis_type
+@pytest.mark.distributed
 def test_compressed_train_step_8dev(subproc):
     code = """
 import jax, jax.numpy as jnp, re
@@ -232,6 +234,7 @@ print("COMPRESS_OK", float(m["compression_ratio"]))
 
 
 @needs_axis_type
+@pytest.mark.distributed
 def test_dryrun_cell_production_mesh(subproc):
     """One real cell through the actual 512-device dry-run path."""
     code = """
@@ -268,6 +271,7 @@ def test_engine_whisper_cross_attention():
 
 
 @needs_axis_type
+@pytest.mark.distributed
 def test_elastic_reshard_restore(subproc, tmp_path):
     """Checkpoint written on 1 device restores onto an 8-device mesh with
     explicit shardings and continues training (elastic scaling)."""
@@ -310,6 +314,7 @@ print("ELASTIC_OK", float(m["loss"]))
 
 
 @needs_axis_type
+@pytest.mark.distributed
 def test_distributed_halo_chase_8dev(subproc):
     """Beyond-paper: single-matrix bulge chase sharded column-wise over 8
     devices with collective_permute halo exchange — bit-exact vs local."""

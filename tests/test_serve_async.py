@@ -277,6 +277,7 @@ def test_serve_mesh_single_device_degrades_to_none(monkeypatch):
 
 
 @needs_axis_type
+@pytest.mark.distributed
 def test_async_sharded_dispatch_8dev(subproc):
     """Full buckets batch-shard across 8 (fake) devices: results match the
     oracle, padding to shard divisibility is sliced off, and the metrics

@@ -372,6 +372,7 @@ def test_async_deadline_rechecked_at_completion():
 # ---------------------------------------------------------------------------
 
 @needs_axis_type
+@pytest.mark.distributed
 def test_sharded_shard_loss_redispatch_bitwise_identical(subproc):
     code = """
 import os, numpy as np, jax
@@ -404,6 +405,7 @@ print("SHARD_LOSS_BITWISE_OK")
 
 
 @needs_axis_type
+@pytest.mark.distributed
 def test_async_sharded_engine_survives_shard_loss(subproc):
     """End-to-end: the async engine on a mesh, with per-shard losses
     injected — every request completes with the oracle spectrum and the
